@@ -1,0 +1,135 @@
+"""Paper-experiment benchmarks (Section 7): one function per table/figure.
+
+The paper ran on EC2; we run single-host CPU, so absolute times differ —
+what must reproduce are the *relations* its tables/figures show:
+  Table 2:  disReach beats disReach_n and disReach_m on time; traffic(dis)
+            << traffic(n); disReach visits each site once, _m many times.
+  Fig 11a:  more fragments -> disReach faster, disReach_m slower.
+  Fig 11b:  disReach scales mildly with size(F).
+  Exp 2:    disDist mirrors disReach.
+  Exp 3:    disRPQ beats centralized; time grows with |V_q|.
+  Exp 4:    MRdRPQ works but pays the single-reducer/map-shipping penalty.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import (build_query_automaton, dis_dist, dis_reach, dis_rpq,
+                        fragment_graph)
+from repro.core.baselines import dis_reach_m, dis_reach_n
+from repro.core.mapreduce import mr_drpq
+from repro.graph import erdos_renyi, random_partition
+
+
+def _timed(fn: Callable, repeat: int = 3) -> float:
+    fn()                                   # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        fn()
+    return (time.perf_counter() - t0) / repeat * 1e6     # us
+
+
+def _queries(g, n_q: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(g.n)), int(rng.integers(g.n)))
+            for _ in range(n_q)]
+
+
+def table2_reachability(n: int = 3000, m: int = 12000, k: int = 4,
+                        n_q: int = 5) -> List[Dict]:
+    """disReach vs disReach_n vs disReach_m: time + traffic + visits."""
+    g = erdos_renyi(n, m, n_labels=8, seed=0)
+    fr = fragment_graph(g, random_partition(g, k, 0), k)
+    qs = [q for q in _queries(g, n_q) if q[0] != q[1]]
+    rows = []
+    for name, fn, traffic, visits in [
+        ("disReach", lambda s, t: dis_reach(fr, s, t),
+         lambda r: r.stats.payload_bits, lambda r: fr.k),
+        ("disReach_n", lambda s, t: dis_reach_n(fr, s, t),
+         lambda r: r.traffic_bits, lambda r: r.site_visits),
+        ("disReach_m", lambda s, t: dis_reach_m(fr, s, t),
+         lambda r: r.traffic_bits, lambda r: r.site_visits),
+    ]:
+        us = np.mean([_timed(lambda: fn(s, t), repeat=1) for s, t in qs])
+        r = fn(*qs[0])
+        rows.append(dict(algo=name, us_per_query=us,
+                         traffic_bits=traffic(r), site_visits=visits(r)))
+    return rows
+
+
+def fig11a_vary_fragments(n: int = 4000, m: int = 16000,
+                          ks=(2, 4, 8, 16)) -> List[Dict]:
+    g = erdos_renyi(n, m, n_labels=8, seed=1)
+    s, t = 1, n - 2
+    rows = []
+    for k in ks:
+        fr = fragment_graph(g, random_partition(g, k, 1), k)
+        rows.append(dict(
+            card_f=k,
+            disReach_us=_timed(lambda: dis_reach(fr, s, t), 2),
+            disReach_m_us=_timed(lambda: dis_reach_m(fr, s, t), 2),
+            disReach_m_rounds=dis_reach_m(fr, s, t).rounds,
+        ))
+    return rows
+
+
+def fig11b_vary_size(sizes=(1000, 2000, 4000, 8000), k: int = 8) -> List[Dict]:
+    rows = []
+    for n in sizes:
+        g = erdos_renyi(n, 4 * n, n_labels=8, seed=2)
+        fr = fragment_graph(g, random_partition(g, k, 2), k)
+        rows.append(dict(n=n, size_f=fr.largest_fragment(),
+                         disReach_us=_timed(lambda: dis_reach(fr, 0, n - 1),
+                                            2)))
+    return rows
+
+
+def exp2_bounded(n: int = 3000, m: int = 12000, ks=(2, 4, 8),
+                 bound: int = 10) -> List[Dict]:
+    g = erdos_renyi(n, m, n_labels=8, seed=3)
+    rows = []
+    for k in ks:
+        fr = fragment_graph(g, random_partition(g, k, 3), k)
+        rows.append(dict(card_f=k,
+                         disDist_us=_timed(
+                             lambda: dis_dist(fr, 0, n - 1, bound), 2)))
+    return rows
+
+
+def exp3_regular(n: int = 800, m: int = 3200, k: int = 4) -> List[Dict]:
+    """disRPQ vs centralized (k=1 == ship-all) + query-complexity sweep."""
+    g = erdos_renyi(n, m, n_labels=8, seed=4)
+    fr = fragment_graph(g, random_partition(g, k, 4), k)
+    fr1 = fragment_graph(g, np.zeros(g.n, np.int32), 1)   # centralized
+    regexes = {            # growing |V_q|
+        4: "0* 1*",
+        6: "0* 1* 2*",
+        8: "(0|1)* 2* 3*",
+        10: "(0|1|2)* (3|4)* 5",
+    }
+    rows = []
+    for vq, rx in regexes.items():
+        qa = build_query_automaton(rx, lambda x: int(x))
+        rows.append(dict(
+            v_q=qa.n_states,
+            disRPQ_us=_timed(lambda: dis_rpq(fr, 0, n - 1, qa), 1),
+            disRPQ_n_us=_timed(lambda: dis_rpq(fr1, 0, n - 1, qa), 1),
+            payload_bits=dis_rpq(fr, 0, n - 1, qa).stats.payload_bits,
+        ))
+    return rows
+
+
+def exp4_mapreduce(n: int = 800, m: int = 3200, k: int = 4) -> List[Dict]:
+    g = erdos_renyi(n, m, n_labels=8, seed=5)
+    fr = fragment_graph(g, random_partition(g, k, 5), k)
+    qa = build_query_automaton("(0|1)* 2", lambda x: int(x))
+    res = mr_drpq(fr, 0, n - 1, qa)
+    return [dict(
+        MRdRPQ_us=_timed(lambda: mr_drpq(fr, 0, n - 1, qa), 1),
+        disRPQ_us=_timed(lambda: dis_rpq(fr, 0, n - 1, qa), 1),
+        ecc_bits=res.ecc_bits,
+        reducer_input_bits=res.reducer_input_bits,
+    )]

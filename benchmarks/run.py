@@ -1,0 +1,45 @@
+"""Benchmark entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers)."""
+from __future__ import annotations
+
+import sys
+
+from . import paper_experiments as pe
+
+
+def _emit(section: str, rows):
+    for row in rows:
+        us = next((v for k, v in row.items() if k.endswith("_us")
+                   or k == "us_per_query"), 0.0)
+        derived = ";".join(f"{k}={v}" for k, v in row.items()
+                           if not (k.endswith("_us") or k == "us_per_query"))
+        name = row.get("algo") or section
+        print(f"{section}/{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    scale = 0.25 if fast else 1.0
+
+    print("# paper Table 2: reachability time/traffic/visits")
+    _emit("table2", pe.table2_reachability(n=int(3000 * scale) + 100,
+                                           m=int(12000 * scale) + 400))
+    print("# paper Fig 11(a): vary card(F)")
+    _emit("fig11a", pe.fig11a_vary_fragments(n=int(4000 * scale) + 100,
+                                             m=int(16000 * scale) + 400))
+    print("# paper Fig 11(b): vary size(F)")
+    sizes = (500, 1000, 2000) if fast else (1000, 2000, 4000, 8000)
+    _emit("fig11b", pe.fig11b_vary_size(sizes=sizes))
+    print("# paper Exp-2: bounded reachability")
+    _emit("exp2", pe.exp2_bounded(n=int(3000 * scale) + 100,
+                                  m=int(12000 * scale) + 400))
+    print("# paper Exp-3: regular reachability + query complexity")
+    _emit("exp3", pe.exp3_regular(n=int(800 * scale) + 100,
+                                  m=int(3200 * scale) + 400))
+    print("# paper Exp-4: MapReduce")
+    _emit("exp4", pe.exp4_mapreduce(n=int(800 * scale) + 100,
+                                    m=int(3200 * scale) + 400))
+
+
+if __name__ == "__main__":
+    main()

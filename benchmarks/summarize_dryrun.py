@@ -1,0 +1,58 @@
+"""Merge per-arch dry-run JSONs and emit the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def merge(pattern: str = "results/dr_*.json",
+          out: str = "results/dryrun_all.json"):
+    by_key = {}
+    for path in sorted(glob.glob(pattern)):
+        for r in json.load(open(path)):
+            key = (r["arch"], r["shape"], r["mesh"])
+            prev = by_key.get(key)
+            # prefer ok records (retries of previously failed cells)
+            if prev is None or (prev["status"] == "error"
+                                and r["status"] != "error"):
+                by_key[key] = r
+    records = list(by_key.values())
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    return records
+
+
+def dryrun_table(records, mesh=None):
+    rows = []
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"SKIP | {r['reason'][:60]}... |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | {r.get('error', '')[:60]} |")
+            continue
+        gib = r["peak_bytes_per_dev"] / 2**30
+        coll_mib = r["collective_bytes"] / 2**20
+        sched = "; ".join(r["collective_schedule"][:2])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {gib:.2f} | "
+            f"{r.get('probe_flops', r['hlo_flops']):.2e} | "
+            f"{coll_mib:.0f} | {r['collective_count']} | {sched[:80]} |")
+    hdr = ("| arch | shape | mesh | GiB/dev | HLO FLOPs/dev | coll MiB/dev "
+           "| #coll | schedule (head) |")
+    sep = "|---" * 8 + "|"
+    return "\n".join([hdr, sep] + rows)
+
+
+if __name__ == "__main__":
+    recs = merge(*(sys.argv[1:2] or ["results/dr_*.json"]))
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    er = sum(1 for r in recs if r["status"] == "error")
+    print(f"merged: {len(recs)} records ({ok} ok / {sk} skipped / {er} err)\n")
+    print(dryrun_table(recs))

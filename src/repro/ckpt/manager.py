@@ -1,0 +1,101 @@
+"""Checkpoint manager: atomic versioned saves, latest-pointer restore, GC.
+
+Fault-tolerance contract (used by train.Trainer):
+  * ``save`` writes to a temp dir then os.rename's it into place — a crash
+    mid-save never corrupts the latest checkpoint;
+  * the ``LATEST`` pointer is written (atomically) only after the payload
+    rename, so restore always sees a complete checkpoint;
+  * ``restore`` rebuilds the exact pytree (structure pickled, leaves npz);
+  * ``gc`` keeps the newest ``keep`` checkpoints.
+Async mode hands the (host-copied) pytree to a background thread so the
+training step loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def _latest_file(self) -> str:
+        return os.path.join(self.dir, "LATEST")
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)   # device -> host copy
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self.wait()                               # one in flight max
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree.flatten(host_tree)
+        np.savez(os.path.join(tmp, "leaves.npz"),
+                 **{f"leaf_{i:05d}": np.asarray(x)
+                    for i, x in enumerate(leaves)})
+        with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+            pickle.dump(jax.tree.structure(host_tree), f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # atomic latest-pointer update
+        ptr_tmp = self._latest_file() + ".tmp"
+        with open(ptr_tmp, "w") as f:
+            f.write(str(step))
+        os.replace(ptr_tmp, self._latest_file())
+        self.gc()
+
+    # -- restore ---------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        try:
+            with open(self._latest_file()) as f:
+                return int(f.read().strip())
+        except FileNotFoundError:
+            return None
+
+    def restore(self, step: Optional[int] = None) -> Any:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "treedef.pkl"), "rb") as f:
+            treedef = pickle.load(f)
+        data = np.load(os.path.join(d, "leaves.npz"))
+        leaves = [data[f"leaf_{i:05d}"] for i in range(len(data.files))]
+        return jax.tree.unflatten(treedef, leaves)
+
+    # -- gc ----------------------------------------------------------------------
+    def gc(self) -> None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,37 @@
+"""Architecture registry: the 10 assigned architectures (+ the paper's own
+graph-engine configs) as selectable ``--arch <id>`` entries.
+
+Every arch exposes shape_ids(), skip_reason(shape), and
+build(shape, multipod, reduced) -> CellProgram (see families/base.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from . import (bert4rec_cfg, chatglm3_6b, egnn_cfg, gat_cora, mace_cfg,
+               mixtral_8x7b, nequip_cfg, olmoe_1b_7b, qwen1_5_32b,
+               qwen2_1_5b)
+
+ARCHS: Dict[str, object] = {
+    a.ARCH.arch_id: a.ARCH
+    for a in (olmoe_1b_7b, mixtral_8x7b, qwen1_5_32b, qwen2_1_5b,
+              chatglm3_6b, egnn_cfg, mace_cfg, nequip_cfg, gat_cora,
+              bert4rec_cfg)
+}
+
+
+def get_arch(arch_id: str):
+    return ARCHS[arch_id]
+
+
+def list_archs() -> List[str]:
+    return list(ARCHS)
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """Every (arch, shape) pair — 40 cells."""
+    out = []
+    for aid, arch in ARCHS.items():
+        for sid in arch.shape_ids():
+            out.append((aid, sid))
+    return out

@@ -1,0 +1,195 @@
+"""LM-family adapter: builds train/prefill/decode/long cell programs for
+the five assigned transformer architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ...models import transformer as T
+from .base import (CellProgram, abstract_like, dp, make_train_step,
+                   opt_state_like, sds, spec_tree)
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShapes:
+    train_seq: int = 4096
+    train_batch: int = 256
+    grad_accum: int = 8
+    prefill_seq: int = 32768
+    prefill_batch: int = 32
+    decode_seq: int = 32768
+    decode_batch: int = 128
+    long_seq: int = 524288
+    long_batch: int = 1
+
+
+@dataclasses.dataclass
+class LMArch:
+    arch_id: str
+    base_cfg: T.LMConfig                 # full-size config (dtype bf16)
+    smoke_cfg: T.LMConfig                # reduced config for CPU smoke
+    long_ok: bool                        # sub-quadratic (SWA) => run long_500k
+    kv_quant_decode: bool = False        # int8 KV for the huge caches
+    shapes: LMShapes = dataclasses.field(default_factory=LMShapes)
+    family: str = "lm"
+
+    def shape_ids(self):
+        return list(LM_SHAPES)
+
+    def skip_reason(self, shape_id: str) -> Optional[str]:
+        if shape_id == "long_500k" and not self.long_ok:
+            return ("pure full-attention arch: 500k-token decode requires "
+                    "sub-quadratic attention (assignment: skip + note)")
+        return None
+
+    # ------------------------------------------------------------------
+    def _cfg(self, shape_id: str, reduced: bool,
+             probe_layers: Optional[int] = None, multipod: bool = False,
+             optimized: bool = False) -> T.LMConfig:
+        cfg = self.smoke_cfg if reduced else self.base_cfg
+        kw = {}
+        if optimized:
+            kw["dp_axes"] = dp(multipod)
+        if shape_id in ("train_4k", "prefill_32k"):
+            # 2048 at 32k keeps the unrolled block-pair count manageable
+            kw["attn_chunk"] = 8 if reduced else \
+                (2048 if shape_id == "prefill_32k" else 1024)
+        if shape_id in ("decode_32k", "long_500k"):
+            kw["decode_chunk"] = 16 if reduced else 2048
+            if self.kv_quant_decode and shape_id == "decode_32k":
+                kw["kv_quant_int8"] = True
+        if probe_layers is not None:
+            kw["n_layers"] = probe_layers
+            kw["unroll"] = True
+        return dataclasses.replace(cfg, **kw)
+
+    def _dims(self, shape_id: str, reduced: bool) -> Dict[str, int]:
+        s = self.shapes
+        if reduced:
+            return dict(train_seq=32, train_batch=8, grad_accum=2,
+                        prefill_seq=64, prefill_batch=2, decode_seq=64,
+                        decode_batch=4, long_seq=128, long_batch=1)
+        return dict(train_seq=s.train_seq, train_batch=s.train_batch,
+                    grad_accum=s.grad_accum, prefill_seq=s.prefill_seq,
+                    prefill_batch=s.prefill_batch, decode_seq=s.decode_seq,
+                    decode_batch=s.decode_batch, long_seq=s.long_seq,
+                    long_batch=s.long_batch)
+
+    # ------------------------------------------------------------------
+    def build(self, shape_id: str, multipod: bool = False,
+              reduced: bool = False,
+              probe_layers: Optional[int] = None,
+              optimized: bool = False) -> CellProgram:
+        """probe_layers: build a loop-free cost probe at that layer count
+        (and, for train, a single microbatch with cost_scale=grad_accum);
+        the dry-run extrapolates HLO costs linearly in n_layers.
+        optimized: beyond-paper sharding hints (EXPERIMENTS.md §Perf)."""
+        cfg = self._cfg(shape_id, reduced, probe_layers, multipod, optimized)
+        d = self._dims(shape_id, reduced)
+        params_abs = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.key(0)))
+        pspec = spec_tree(params_abs,
+                          lambda path, leaf: _lm_param_spec(cfg, path, leaf))
+        dpx = dp(multipod)
+
+        if shape_id == "train_4k":
+            A, B, S = d["grad_accum"], d["train_batch"], d["train_seq"]
+            mb = B // A
+            loss = lambda p, tok, tgt: T.lm_loss(cfg, p, tok, tgt)
+            m, v, st = opt_state_like(params_abs)
+            if probe_layers is not None:
+                # one microbatch, loop-free; dry-run scales by A
+                step = make_train_step(loss, accum=False)
+                tok = sds((mb, S), jnp.int32)
+                tok_spec = P(dpx, None)
+                scale = float(A)
+            else:
+                step = make_train_step(loss, accum=True)
+                tok = sds((A, mb, S), jnp.int32)
+                tok_spec = P(None, dpx, None)
+                scale = 1.0
+            args = (params_abs, m, v, st, tok, tok)
+            specs = (pspec, pspec, pspec, P(), tok_spec, tok_spec)
+            n = self.base_cfg.n_active_params()
+            flops = 6.0 * n * B * S
+            return CellProgram(self.arch_id, shape_id, "train", step, args,
+                               specs, flops, 10.0 * self.base_cfg.n_params(),
+                               cost_scale=scale)
+
+        mf_cfg = cfg if reduced else self.base_cfg   # model-flops reference
+
+        if shape_id == "prefill_32k":
+            B, S = d["prefill_batch"], d["prefill_seq"]
+
+            def step(p, tok):
+                logits, _ = T.forward(cfg, p, tok)
+                return logits
+
+            tok = sds((B, S), jnp.int32)
+            args = (params_abs, tok)
+            specs = (pspec, P(dpx, None))
+            flops = 2.0 * mf_cfg.n_active_params() * B * S
+            return CellProgram(self.arch_id, shape_id, "prefill", step, args,
+                               specs, flops, 2.0 * mf_cfg.n_params())
+
+        # decode cells lower serve_step: one token, existing KV cache
+        B = d["decode_batch"] if shape_id == "decode_32k" else d["long_batch"]
+        S = d["decode_seq"] if shape_id == "decode_32k" else d["long_seq"]
+        cache_abs = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+        cache_spec = spec_tree(
+            cache_abs, lambda path, leaf: _cache_spec(path, leaf, dpx, B))
+
+        def step(p, cache, token, pos):
+            return T.decode_step(cfg, p, cache, token, pos)
+
+        args = (params_abs, cache_abs, sds((B,), jnp.int32),
+                sds((B,), jnp.int32))
+        bspec = P(dpx) if B > 1 else P()
+        specs = (pspec, cache_spec, bspec, bspec)
+        flops = 2.0 * mf_cfg.n_active_params() * B + \
+            2.0 * 2 * mf_cfg.n_layers * mf_cfg.n_kv_heads * mf_cfg.d_head * \
+            B * min(S, T.cache_len(mf_cfg, S)) * \
+            (mf_cfg.n_heads // mf_cfg.n_kv_heads)
+        kind = "decode" if shape_id == "decode_32k" else "long_decode"
+        return CellProgram(self.arch_id, shape_id, kind, step, args, specs,
+                           flops, 2.0 * cfg.n_params())
+
+
+def _lm_param_spec(cfg: T.LMConfig, path: str, leaf) -> P:
+    """FSDP(d_model->data) x TP(heads/ffn/vocab->model); MoE experts on
+    model when divisible.  Pod axis left unmentioned => pure DP across pods.
+    """
+    nd = len(leaf.shape)
+    if "embed" in path or "lm_head" in path:
+        return P("model", None) if nd == 2 else P()
+    if nd <= 2:                    # ln scales, biases [L, d]/[L, h*dh]
+        return P()
+    if "router" in path:           # [L, d, E]
+        return P(None, "data", None)
+    if nd == 4:                    # MoE experts [L, E, d, ffe] / [L, E, ffe, d]
+        if cfg.n_experts % 16 == 0:
+            return P(None, "model", "data", None)
+        return P(None, None, "data", "model") if "w2" not in path else \
+            P(None, None, "model", "data")
+    # [L, d, out] projections: shard d on data (FSDP), out on model (TP)
+    if "wo" in path or "w2" in path:
+        return P(None, "model", "data")
+    return P(None, "data", "model")
+
+
+def _cache_spec(path: str, leaf, dpx, batch: int) -> P:
+    bs = dpx if batch > 1 else None
+    nd = len(leaf.shape)
+    if nd == 5:                    # k/v [L, B, T, H, dh]
+        return P(None, bs, "model", None, None)
+    if nd == 4:                    # scales [L, B, T, H]
+        return P(None, bs, "model", None)
+    if nd == 3:                    # pos [L, B, T]
+        return P(None, bs, "model")
+    return P()

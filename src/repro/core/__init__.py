@@ -1,0 +1,12 @@
+"""The paper's primary contribution: distributed (bounded / regular)
+reachability queries via partial evaluation, with performance guarantees."""
+from .api import QueryResult, dis_dist, dis_reach, dis_rpq, dis_rpq_regex
+from .automaton import QueryAutomaton, accepts, build_query_automaton
+from .engine import INF, QueryStats
+from .fragments import Fragmentation, fragment_graph, query_slots
+
+__all__ = [
+    "QueryResult", "dis_dist", "dis_reach", "dis_rpq", "dis_rpq_regex",
+    "QueryAutomaton", "accepts", "build_query_automaton",
+    "INF", "QueryStats", "Fragmentation", "fragment_graph", "query_slots",
+]

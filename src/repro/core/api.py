@@ -1,0 +1,158 @@
+"""Public query API: disReach, disDist, disRPQ (paper Figs. 3-7).
+
+Single-host evaluation: the fragment axis is vmapped (every fragment's
+localEval runs as one SPMD program — identical math to the shard_map
+multi-device engine in ``distributed.py``, which is used on real meshes).
+
+Answer extraction (coordinator side):
+  * source row  = reserved row B-2 (s), in automaton state u_s for disRPQ;
+  * target cols = reserved col B-1 (t arrivals internal to t's fragment)
+                  plus the alias col b_index[t] when t itself is a boundary
+                  in-node (arrivals via a cross edge landing exactly on t).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.graph import Graph
+from . import engine
+from .automaton import QueryAutomaton, build_query_automaton
+from .engine import INF, QueryStats
+from .fragments import Fragmentation, fragment_graph, query_slots
+
+
+def _as_jnp(fr: Fragmentation):
+    return {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+
+
+def _tgt_cols(fr: Fragmentation, t: int) -> jnp.ndarray:
+    B = fr.B
+    cols = np.zeros(B, dtype=bool)
+    cols[fr.T_COL] = True
+    bt = fr.b_index[t]
+    if bt >= 0:
+        cols[bt] = True
+    return jnp.asarray(cols)
+
+
+def _src_rows(fr: Fragmentation) -> jnp.ndarray:
+    rows = np.zeros(fr.B, dtype=bool)
+    rows[fr.S_ROW] = True
+    return jnp.asarray(rows)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    answer: bool
+    distance: Optional[int]
+    stats: QueryStats
+    dependency_matrix: Optional[np.ndarray] = None
+
+
+# ---------------------------------------------------------------------------
+# disReach (paper Fig. 3)
+# ---------------------------------------------------------------------------
+
+def dis_reach(fr: Fragmentation, s: int, t: int,
+              return_matrix: bool = False) -> QueryResult:
+    if s == t:
+        return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
+    arrs = _as_jnp(fr)
+    qs = query_slots(fr, s, t)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, sloc, tloc: engine.local_eval_reach(
+            es, ed, sl, sr, tl, sloc, tloc, n_max=fr.n_max, B=fr.B))
+    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"],
+                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
+    D = jnp.any(rlocs, axis=0)                 # assemble (the one collective)
+    ans = engine.evaldg_reach(D, _src_rows(fr), _tgt_cols(fr, t))
+    stats = QueryStats(payload_bits=fr.B * fr.B, collective_rounds=1,
+                       boundary=fr.B, states=1)
+    return QueryResult(bool(ans), None, stats,
+                       np.asarray(D) if return_matrix else None)
+
+
+# ---------------------------------------------------------------------------
+# disDist (paper Sec. 4)
+# ---------------------------------------------------------------------------
+
+def dis_dist(fr: Fragmentation, s: int, t: int,
+             bound: Optional[int] = None) -> QueryResult:
+    """Bounded reachability q_br(s, t, l); with bound=None returns exact
+    dist(s, t) (INF -> unreachable -> distance None)."""
+    if s == t:
+        ok = bound is None or 0 <= bound
+        return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
+    cap = jnp.int32(bound) if bound is not None else INF
+    arrs = _as_jnp(fr)
+    qs = query_slots(fr, s, t)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, sloc, tloc: engine.local_eval_dist(
+            es, ed, sl, sr, tl, sloc, tloc, cap, n_max=fr.n_max, B=fr.B))
+    wlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"],
+                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
+    W = jnp.min(wlocs, axis=0)
+    d = engine.evaldg_dist(W, _src_rows(fr), _tgt_cols(fr, t))
+    d = int(d)
+    reachable = d < int(INF)
+    answer = reachable if bound is None else (reachable and d <= bound)
+    stats = QueryStats(payload_bits=fr.B * fr.B * 32, collective_rounds=1,
+                       boundary=fr.B, states=1)
+    return QueryResult(answer, d if reachable else None, stats)
+
+
+# ---------------------------------------------------------------------------
+# disRPQ (paper Sec. 5)
+# ---------------------------------------------------------------------------
+
+def dis_rpq(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton,
+            return_matrix: bool = False) -> QueryResult:
+    if s == t:
+        return QueryResult(bool(qa.nullable), 0,
+                           QueryStats(0, 0, fr.B, qa.n_states))
+    Q = qa.n_states
+    arrs = _as_jnp(fr)
+    qs = query_slots(fr, s, t)
+    q_labels = jnp.asarray(qa.state_labels)
+    q_trans = jnp.asarray(qa.trans)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, lab, gid, sloc, tloc:
+        engine.local_eval_regular(es, ed, sl, sr, tl, lab, gid,
+                                  q_labels, q_trans, sloc, tloc,
+                                  jnp.int32(s), jnp.int32(t),
+                                  n_max=fr.n_max, B=fr.B))
+    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"], arrs["labels"],
+                  arrs["gids"],
+                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
+    D = jnp.any(rlocs, axis=0)                  # [(B*Q), (B*Q)]
+
+    src_rows = np.zeros(fr.B * Q, dtype=bool)
+    src_rows[fr.S_ROW * Q + qa.start] = True
+    tgt_cols = np.zeros(fr.B * Q, dtype=bool)
+    tgt_cols[fr.T_COL * Q + qa.final] = True
+    bt = fr.b_index[t]
+    if bt >= 0:
+        tgt_cols[bt * Q + qa.final] = True
+    ans = engine.evaldg_reach(D, jnp.asarray(src_rows), jnp.asarray(tgt_cols))
+    stats = QueryStats(payload_bits=(fr.B * Q) ** 2, collective_rounds=1,
+                       boundary=fr.B, states=Q)
+    return QueryResult(bool(ans), None, stats,
+                       np.asarray(D) if return_matrix else None)
+
+
+def dis_rpq_regex(fr: Fragmentation, s: int, t: int, regex: str,
+                  **kw) -> QueryResult:
+    g = fr.g
+    if g.label_names is not None:
+        qa = build_query_automaton(regex, g.label_of)
+    else:
+        qa = build_query_automaton(regex, lambda name: int(name))
+    return dis_rpq(fr, s, t, qa, **kw)

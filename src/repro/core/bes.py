@@ -1,0 +1,78 @@
+"""Boolean-equation-system / dependency-graph closure utilities.
+
+The paper solves the assembled BES (a disjunctive system [14]) by
+reachability on the dependency graph G_d.  Two regimes:
+
+* single query  -> single-source fixpoint (``engine.evaldg_*``), O(diam B^2);
+* many queries / reusable fragmentation -> **all-pairs closure** by repeated
+  squaring: ceil(log2 B) semiring matmuls on the MXU.  Amortizes across a
+  query workload; also the target of the Pallas kernels
+  (``repro.kernels.bool_matmul`` / ``tropical_matmul`` / ``bitpack_ops``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .engine import INF
+
+
+def _ceil_log2(b: int) -> int:
+    return max(1, math.ceil(math.log2(max(b, 2))))
+
+
+def bool_closure(D, use_pallas: bool = False):
+    """Reflexive-transitive closure of a Boolean matrix [B, B].
+
+    A := A | A@A, repeated ceil(log2 B) times over A = D | I.
+    """
+    B = D.shape[-1]
+    if use_pallas:
+        from ..kernels.bool_matmul import ops as bops
+        matmul = bops.bool_matmul
+    else:
+        matmul = lambda a, b: (a.astype(jnp.float32) @ b.astype(jnp.float32)) > 0
+    A = D | jnp.eye(B, dtype=bool)
+
+    def body(_, A):
+        return A | matmul(A, A)
+
+    return jax.lax.fori_loop(0, _ceil_log2(B), body, A)
+
+
+def tropical_closure(W, use_pallas: bool = False, row_chunk: int = 64):
+    """Min-plus closure of a distance matrix [B, B] (diag forced to 0).
+
+    W := min(W, W (min,+) W), repeated ceil(log2 B) times.
+    The pure-jnp path chunks rows to avoid a B^3 intermediate.
+    """
+    B = W.shape[-1]
+    W = jnp.where(jnp.eye(B, dtype=bool), 0, W).astype(jnp.int32)
+
+    if use_pallas:
+        from ..kernels.tropical_matmul import ops as tops
+        mp = tops.tropical_matmul
+    else:
+        def mp(a, b):
+            def one_chunk(rows):
+                # rows [C, B] (min,+) b [B, B] -> [C, B]
+                return jnp.min(rows[:, :, None] + b[None, :, :], axis=1)
+            n_chunks = max(1, B // row_chunk)
+            if B % row_chunk == 0 and n_chunks > 1:
+                chunks = a.reshape(n_chunks, row_chunk, B)
+                out = jax.lax.map(one_chunk, chunks)
+                return out.reshape(B, B)
+            return one_chunk(a)
+
+    def body(_, W):
+        return jnp.minimum(jnp.minimum(W, mp(W, W)), INF)
+
+    return jax.lax.fori_loop(0, _ceil_log2(B), body, W)
+
+
+def closure_answers(A, src_rows, tgt_cols):
+    """Batch answer extraction: ans[q] = any A[src[q], tgt[q]] for index
+    arrays src_rows/tgt_cols [nq]."""
+    return A[src_rows, tgt_cols]

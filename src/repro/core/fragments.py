@@ -1,0 +1,178 @@
+"""Fragmentation F = (F, G_f) of a graph (paper Section 2.1), padded for SPMD.
+
+Host-side preparation that turns ``(Graph, partition)`` into a uniform,
+padded pytree of per-fragment arrays so that one ``shard_map``/``vmap``
+program evaluates ``localEval`` on every fragment in parallel — the paper's
+"each site computes its partial answer in parallel" with a *single* program.
+
+Local node layout inside fragment ``F_i`` (paper Fig. 1 / Sec 2.1):
+
+  * locals ``0 .. n_i-1``      — the real nodes ``V_i`` (partition class i);
+  * locals ``n_i .. n_i+o_i-1`` — *virtual nodes* ``F_i.O``: one stub per
+    distinct cross-edge target (labels copied from the target node so that
+    regular queries can match on them);
+  * local ``Nmax``              — a pad node; pad edges self-loop on it.
+
+The *fragment graph* ``G_f``'s node set ``V_f`` is materialized as
+``bnodes``: every node with an incoming cross edge (== every in-node ==
+every virtual-node origin), plus two reserved dynamic slots for the query
+endpoints: row/col ``B-2`` is ``s`` and col ``B-1`` is ``t`` (the paper adds
+``s`` to iset and ``t`` to oset at query time; we reserve static slots so the
+compiled program is query-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from ..graph.graph import Graph
+
+
+@dataclasses.dataclass
+class Fragmentation:
+    """Host metadata + stacked padded per-fragment arrays."""
+
+    g: Graph
+    part: np.ndarray          # [n] fragment id per node
+    k: int                    # number of fragments (sites)
+    bnodes: np.ndarray        # [B-2] global ids of boundary nodes (V_f)
+    b_index: np.ndarray       # [n] position in bnodes or -1
+    n_max: int                # max local slots (real + stubs) over fragments
+    e_max: int                # max local edges over fragments
+    s_max: int                # max sources per fragment (in-nodes + 1 for s)
+    arrays: Dict[str, np.ndarray]   # stacked [k, ...] device-ready arrays
+    frag_sizes: np.ndarray    # [k] |F_i| = n_i + e_i  (paper's |F_i|)
+    # local index of every *global* node inside its owning fragment
+    owner_local: np.ndarray   # [n]
+
+    @property
+    def B(self) -> int:       # boundary matrix side (|V_f| + 2 query slots)
+        return len(self.bnodes) + 2
+
+    @property
+    def S_ROW(self) -> int:   # reserved boundary row/col for s
+        return self.B - 2
+
+    @property
+    def T_COL(self) -> int:   # reserved boundary col for t
+        return self.B - 1
+
+    def fragment_of(self, v: int) -> int:
+        return int(self.part[v])
+
+    def traffic_bits_reach(self) -> int:
+        """Upper bound the paper proves: O(|V_f|^2) bits of rvset payload."""
+        return self.B * self.B
+
+    def largest_fragment(self) -> int:
+        return int(self.frag_sizes.max())
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def fragment_graph(g: Graph, part: np.ndarray, k: int,
+                   pad_multiple: int = 8) -> Fragmentation:
+    """Build the padded fragmentation (host, numpy)."""
+    part = np.asarray(part, dtype=np.int32)
+    assert part.shape == (g.n,)
+    assert part.min(initial=0) >= 0 and part.max(initial=0) < k
+
+    cross_mask = part[g.src] != part[g.dst]
+    bnodes = np.unique(g.dst[cross_mask])          # in-nodes == V_f core
+    b_index = np.full(g.n, -1, dtype=np.int64)
+    b_index[bnodes] = np.arange(len(bnodes))
+    B = len(bnodes) + 2
+
+    # --- per-fragment local structures -------------------------------------
+    glists = [np.where(part == i)[0] for i in range(k)]
+    g2l = np.full(g.n, -1, dtype=np.int64)
+    for gl in glists:
+        g2l[gl] = np.arange(len(gl))
+
+    frag_src = [[] for _ in range(k)]
+    frag_dst = [[] for _ in range(k)]
+    stub_maps: list[dict] = [dict() for _ in range(k)]   # global id -> stub local
+
+    src_part = part[g.src]
+    internal = ~cross_mask
+    # internal edges
+    for i in range(k):
+        sel = internal & (src_part == i)
+        frag_src[i] = list(g2l[g.src[sel]])
+        frag_dst[i] = list(g2l[g.dst[sel]])
+    # cross edges -> stubs
+    cs, cd = g.src[cross_mask], g.dst[cross_mask]
+    for u, w in zip(cs, cd):
+        i = int(part[u])
+        sm = stub_maps[i]
+        if int(w) not in sm:
+            sm[int(w)] = len(glists[i]) + len(sm)
+        frag_src[i].append(int(g2l[u]))
+        frag_dst[i].append(sm[int(w)])
+
+    n_locals = [len(glists[i]) + len(stub_maps[i]) for i in range(k)]
+    n_max = _round_up(max(n_locals) if k else 1, pad_multiple)
+    e_max = _round_up(max((len(frag_src[i]) for i in range(k)), default=1),
+                      pad_multiple)
+    e_max = max(e_max, 1)
+
+    in_counts = [int(np.sum(part[bnodes] == i)) for i in range(k)] or [0]
+    s_maxr = max(in_counts) + 1            # +1 reserved source slot for s
+
+    esrc = np.full((k, e_max), n_max, dtype=np.int32)
+    edst = np.full((k, e_max), n_max, dtype=np.int32)
+    gids = np.full((k, n_max + 1), -1, dtype=np.int32)
+    labels = np.full((k, n_max + 1), -9, dtype=np.int32)
+    src_local = np.full((k, s_maxr), n_max, dtype=np.int32)
+    src_row = np.full((k, s_maxr), B, dtype=np.int32)      # B == dropped
+    tgt_local = np.full((k, B), n_max, dtype=np.int32)
+
+    for i in range(k):
+        ne = len(frag_src[i])
+        esrc[i, :ne] = frag_src[i]
+        edst[i, :ne] = frag_dst[i]
+        nl = len(glists[i])
+        gids[i, :nl] = glists[i]
+        labels[i, :nl] = g.labels[glists[i]]
+        for w, loc in stub_maps[i].items():
+            gids[i, loc] = w
+            labels[i, loc] = g.labels[w]
+        # sources: in-nodes owned by this fragment
+        mine = bnodes[part[bnodes] == i]
+        src_local[i, : len(mine)] = g2l[mine]
+        src_row[i, : len(mine)] = b_index[mine]
+        # targets: stubs for boundary nodes of other fragments
+        for w, loc in stub_maps[i].items():
+            tgt_local[i, b_index[w]] = loc
+
+    owner_local = g2l
+    frag_sizes = np.array(
+        [len(glists[i]) + len(frag_src[i]) for i in range(k)], dtype=np.int64)
+
+    arrays = dict(esrc=esrc, edst=edst, gids=gids, labels=labels,
+                  src_local=src_local, src_row=src_row, tgt_local=tgt_local,
+                  n_local=np.array(n_locals, dtype=np.int32))
+    return Fragmentation(g=g, part=part, k=k, bnodes=bnodes, b_index=b_index,
+                         n_max=n_max, e_max=e_max, s_max=s_maxr,
+                         arrays=arrays, frag_sizes=frag_sizes,
+                         owner_local=owner_local)
+
+
+def query_slots(fr: Fragmentation, s: int, t: int) -> Dict[str, np.ndarray]:
+    """Per-query dynamic inputs: where s and t live.
+
+    Returns stacked [k]-arrays: ``s_local``/``t_local`` give the local index
+    of s / t inside the owning fragment (pad ``n_max`` elsewhere).  These are
+    traced values — changing (s, t) does NOT recompile the engine.
+    """
+    k, n_max = fr.k, fr.n_max
+    s_local = np.full(k, n_max, dtype=np.int32)
+    t_local = np.full(k, n_max, dtype=np.int32)
+    s_local[fr.part[s]] = fr.owner_local[s]
+    t_local[fr.part[t]] = fr.owner_local[t]
+    return dict(s_local=s_local, t_local=t_local,
+                s_gid=np.int32(s), t_gid=np.int32(t))

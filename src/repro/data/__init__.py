@@ -1,0 +1,3 @@
+from .pipeline import GraphEpochStream, MaskedItemStream, TokenStream
+
+__all__ = ["GraphEpochStream", "MaskedItemStream", "TokenStream"]

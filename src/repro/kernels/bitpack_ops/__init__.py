@@ -1,0 +1,5 @@
+from .ops import bitpack_bool_matmul, pack_cols, pack_rows, unpack_rows
+from .ref import bitpack_matmul_ref, pack_rows_ref
+
+__all__ = ["bitpack_bool_matmul", "pack_cols", "pack_rows", "unpack_rows",
+           "bitpack_matmul_ref", "pack_rows_ref"]

@@ -1,0 +1,96 @@
+"""Bit-packed or-and matmul Pallas kernel (TPU target) — beyond-paper opt.
+
+The paper counts rvset traffic in *bits* (Theorem 1: |V_f| equations of
+|V_f| bits).  Packing 32 boundary nodes per uint32 lane makes the engine
+match that accounting exactly: the all-gathered boundary matrix and the
+closure working set shrink 32x, and the or-and contraction becomes
+
+    C[i, j] = OR_w ( Apacked[i, w] AND Bpacked[w, j] ) != 0
+
+— pure VPU bitwise ops, 32 contraction steps per loaded word.  The closure
+becomes memory-bound-optimal at the cost of leaving the MXU idle; see
+EXPERIMENTS.md §Perf for the crossover vs ``bool_matmul``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def pack_rows(a: jax.Array) -> jax.Array:
+    """[M, K] bool -> [M, ceil(K/32)] uint32 (bit b of word w = a[:, 32w+b])."""
+    M, K = a.shape
+    W = (K + 31) // 32
+    pad = W * 32 - K
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+    bits = a.reshape(M, W, 32).astype(jnp.uint32)
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def pack_cols(b: jax.Array) -> jax.Array:
+    """[K, N] bool -> [ceil(K/32), N] uint32 (bit b of word w = b[32w+b, :])."""
+    return pack_rows(b.T).T
+
+
+def unpack_rows(ap: jax.Array, K: int) -> jax.Array:
+    """Inverse of pack_rows."""
+    M, W = ap.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (ap[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(M, W * 32)[:, :K].astype(bool)
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, cw: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                       # [bm, bw] uint32
+    b = b_ref[...]                       # [bw, bn] uint32
+    bm, bw = a.shape
+    bn = b.shape[1]
+
+    def chunk(c, acc):
+        a_c = jax.lax.dynamic_slice(a, (0, c * cw), (bm, cw))
+        b_c = jax.lax.dynamic_slice(b, (c * cw, 0), (cw, bn))
+        hit = (a_c[:, :, None] & b_c[None, :, :]) != 0    # [bm, cw, bn]
+        return acc | jnp.any(hit, axis=1)
+
+    acc_ref[...] = jax.lax.fori_loop(0, bw // cw, chunk, acc_ref[...])
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bw", "cw", "interpret"))
+def bitpack_matmul_pallas(ap: jax.Array, bp: jax.Array, *, bm: int = 128,
+                          bn: int = 128, bw: int = 8, cw: int = 8,
+                          interpret: bool = False) -> jax.Array:
+    """ap [M, W] uint32 (row-packed), bp [W, N] uint32 (col-packed) ->
+    or-and product [M, N] bool."""
+    M, W = ap.shape
+    W2, N = bp.shape
+    assert W == W2 and M % bm == 0 and N % bn == 0 and W % bw == 0
+    assert bw % cw == 0
+    k_steps = W // bw
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, cw=cw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bw, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.bool_)],
+        interpret=interpret,
+    )(ap, bp)

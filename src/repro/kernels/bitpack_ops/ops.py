@@ -1,0 +1,31 @@
+"""Jit'd wrapper: packs Boolean operands, pads, runs the packed kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitpack_ops import (bitpack_matmul_pallas, pack_cols, pack_rows,
+                          unpack_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def bitpack_bool_matmul(a: jax.Array, b: jax.Array,
+                        block: int = 128) -> jax.Array:
+    """Boolean or-and matmul via 32x bit-packing.  a [M,K], b [K,N] bool."""
+    M, K = a.shape
+    N = b.shape[1]
+    ap = pack_rows(a.astype(bool))                     # [M, W]
+    bp = pack_cols(b.astype(bool))                     # [W, N]
+    W = ap.shape[1]
+    bw = 8
+    pm, pn, pw = (-M) % block, (-N) % block, (-W) % bw
+    ap = jnp.pad(ap, ((0, pm), (0, pw)))
+    bp = jnp.pad(bp, ((0, pw), (0, pn)))
+    out = bitpack_matmul_pallas(ap, bp, bm=block, bn=block, bw=bw,
+                                interpret=jax.default_backend() != "tpu")
+    return out[:M, :N]
+
+
+__all__ = ["bitpack_bool_matmul", "pack_rows", "pack_cols", "unpack_rows"]

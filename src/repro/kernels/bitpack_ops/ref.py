@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the bit-packed or-and matmul (and packing)."""
+import jax.numpy as jnp
+
+
+def bitpack_matmul_ref(a_bool, b_bool):
+    """Unpacked oracle: plain or-and product of the Boolean operands."""
+    return (a_bool.astype(jnp.float32) @ b_bool.astype(jnp.float32)) > 0
+
+
+def pack_rows_ref(a):
+    import numpy as np
+    a = np.asarray(a)
+    M, K = a.shape
+    W = (K + 31) // 32
+    out = np.zeros((M, W), dtype=np.uint32)
+    for k in range(K):
+        out[:, k // 32] |= a[:, k].astype(np.uint32) << np.uint32(k % 32)
+    return out

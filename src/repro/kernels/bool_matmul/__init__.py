@@ -1,0 +1,4 @@
+from .ops import bool_matmul
+from .ref import bool_matmul_ref
+
+__all__ = ["bool_matmul", "bool_matmul_ref"]

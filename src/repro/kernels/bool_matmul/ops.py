@@ -1,0 +1,33 @@
+"""Jit'd public wrapper: pads to block multiples, picks interpret mode on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bool_matmul import bool_matmul_pallas
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def bool_matmul(a: jax.Array, b: jax.Array, block: int = 128) -> jax.Array:
+    """Or-and matmul with automatic padding; interpret=True off-TPU."""
+    M, N = a.shape[0], b.shape[1]
+    bm = bn = bk = block
+    a = _pad_to(a.astype(bool), bm, bk)
+    b = _pad_to(b.astype(bool), bk, bn)
+    out = bool_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk,
+                             interpret=not _on_tpu())
+    return out[:M, :N]

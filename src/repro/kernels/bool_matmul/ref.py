@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the or-and semiring matmul."""
+import jax.numpy as jnp
+
+
+def bool_matmul_ref(a, b):
+    """a [M, K] bool, b [K, N] bool -> OR_k(a & b) [M, N] bool."""
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)) > 0

@@ -1,0 +1,4 @@
+from .ops import tropical_matmul
+from .ref import tropical_matmul_ref
+
+__all__ = ["tropical_matmul", "tropical_matmul_ref"]

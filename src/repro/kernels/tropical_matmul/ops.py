@@ -1,0 +1,27 @@
+"""Jit'd public wrapper: INF-pads to block multiples; interpret off-TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tropical_matmul import INF, tropical_matmul_pallas
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)), constant_values=int(INF))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def tropical_matmul(a: jax.Array, b: jax.Array, block: int = 128) -> jax.Array:
+    M, N = a.shape[0], b.shape[1]
+    a = _pad_to(a.astype(jnp.int32), block, block)
+    b = _pad_to(b.astype(jnp.int32), block, block)
+    out = tropical_matmul_pallas(a, b, bm=block, bn=block, bk=block,
+                                 interpret=jax.default_backend() != "tpu")
+    return out[:M, :N]

@@ -1,0 +1,72 @@
+"""Tropical (min, +) semiring matmul Pallas kernel (TPU target).
+
+C[i, j] = min_k ( A[i, k] + B[k, j] )      (int32, INF-saturating)
+
+The disDist closure hot spot (paper Sec. 4; DESIGN.md Sec. 2.1).  There is
+no MXU path for (min, +), so the kernel is VPU-shaped: for each (bm, bk) x
+(bk, bn) block pair it sweeps the contraction axis in chunks of ``ck``,
+materializing a [bm, ck, bn] broadcast-add in VMEM and folding it into the
+accumulator with a running elementwise min.  ck=8 keeps the intermediate at
+128*8*128*4B = 512 KiB worst-case; the accumulator persists across the K
+grid axis in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = 1 << 29    # python int: safe to close over inside the kernel body
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, ck: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, INF)
+
+    a = a_ref[...]                      # [bm, bk] int32
+    b = b_ref[...]                      # [bk, bn] int32
+    bm, bk = a.shape
+    bn = b.shape[1]
+
+    def chunk(c, acc):
+        a_c = jax.lax.dynamic_slice(a, (0, c * ck), (bm, ck))
+        b_c = jax.lax.dynamic_slice(b, (c * ck, 0), (ck, bn))
+        vals = a_c[:, :, None] + b_c[None, :, :]      # [bm, ck, bn]
+        return jnp.minimum(acc, jnp.min(vals, axis=1))
+
+    acc = jax.lax.fori_loop(0, bk // ck, chunk, acc_ref[...])
+    acc_ref[...] = jnp.minimum(acc, INF)              # saturate
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "ck", "interpret"))
+def tropical_matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                           bn: int = 128, bk: int = 128, ck: int = 8,
+                           interpret: bool = False) -> jax.Array:
+    """a [M, K] int32, b [K, N] int32 -> min-plus product [M, N] int32."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2 and K % bk == 0 and M % bm == 0 and N % bn == 0
+    assert bk % ck == 0
+    k_steps = K // bk
+    grid = (M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps, ck=ck),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, b)

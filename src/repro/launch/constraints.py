@@ -1,0 +1,19 @@
+"""Sharding-constraint helper usable inside model code.
+
+``hint(x, spec...)`` applies lax.with_sharding_constraint when tracing
+under a mesh context whose axis names cover the spec, and is a no-op
+otherwise (smoke tests and single-device runs trace the same code with no
+mesh).  The constraint is best-effort by design: models must stay valid
+without any mesh.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def hint(x, *spec_parts):
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec_parts))
+    except Exception:   # no mesh context / unknown axis names -> no-op
+        return x

@@ -1,0 +1,211 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh, record memory/cost/collective analysis.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init); 512 placeholder host devices back both the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --multi-pod both --out results/dryrun.json
+"""
+import argparse    # noqa: E402
+import json        # noqa: E402
+import time        # noqa: E402
+import traceback   # noqa: E402
+
+import jax                                   # noqa: E402
+from jax.sharding import NamedSharding       # noqa: E402
+
+from repro.configs import ARCHS, get_arch    # noqa: E402
+from repro.launch.hlo_stats import (collective_bytes,     # noqa: E402
+                                    collective_schedule)
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+
+
+def _compile(prog, mesh):
+    shardings = jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                             prog.arg_specs,
+                             is_leaf=lambda x: isinstance(
+                                 x, jax.sharding.PartitionSpec))
+    with mesh:
+        lowered = jax.jit(prog.step_fn, in_shardings=shardings).lower(
+            *prog.abstract_args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _costs(compiled, scale: float = 1.0) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return dict(flops=float(cost.get("flops", 0.0)) * scale,
+                bytes=float(cost.get("bytes accessed", 0.0)) * scale,
+                coll=float(coll.get("total", 0)) * scale,
+                coll_count=int(coll.get("count", 0)),
+                breakdown={k: v * scale for k, v in coll.items()
+                           if k not in ("total", "count")})
+
+
+def probe_costs(arch, arch_id, shape_id, multi_pod,
+                optimized: bool = False) -> dict:
+    """Loop-free cost probes (XLA counts loop bodies once, so the full
+    compile undercounts).  LM: 2- and 4-layer unrolled probes, linear
+    extrapolation in n_layers, x grad-accum for train.  recsys serve_bulk:
+    one chunk x n_chunks.  Everything else is loop-free already."""
+    fam = getattr(arch, "family", "")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if fam == "lm":
+        # L=2 / L=4 probes (L=1 degenerates under XLA's optimizer);
+        # slope clamped non-negative for robustness.
+        p2 = arch.build(shape_id, multipod=multi_pod, probe_layers=2,
+                        optimized=optimized)
+        p4 = arch.build(shape_id, multipod=multi_pod, probe_layers=4,
+                        optimized=optimized)
+        c2 = _costs(_compile(p2, mesh))
+        c4 = _costs(_compile(p4, mesh))
+        L = arch.base_cfg.n_layers
+        scale = p2.cost_scale
+        out = {}
+        for k in ("flops", "bytes", "coll"):
+            slope = max((c4[k] - c2[k]) / 2.0, 0.0)
+            out[k] = scale * (c2[k] + slope * (L - 2))
+        out["method"] = f"lm-2pt-extrapolation(L={L}, scale={scale})"
+        return out
+    if fam == "recsys" and shape_id == "serve_bulk":
+        p = arch.build(shape_id, multipod=multi_pod, probe=True,
+                       optimized=optimized)
+        c = _costs(_compile(p, mesh), scale=p.cost_scale)
+        return dict(flops=c["flops"], bytes=c["bytes"], coll=c["coll"],
+                    method=f"chunk-probe(x{p.cost_scale})")
+    return {}
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool,
+             verbose: bool = True, probes: bool = True,
+             optimized: bool = False) -> dict:
+    """Lower + compile one cell; return the dry-run record."""
+    arch = get_arch(arch_id)
+    skip = arch.skip_reason(shape_id)
+    rec = dict(arch=arch_id, shape=shape_id,
+               mesh="2x16x16" if multi_pod else "16x16",
+               variant="optimized" if optimized else "baseline")
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    t0 = time.time()
+    try:
+        prog = arch.build(shape_id, multipod=multi_pod, reduced=False,
+                          optimized=optimized)
+    except TypeError:
+        prog = arch.build(shape_id, multipod=multi_pod, reduced=False)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    compiled = _compile(prog, mesh)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    n_dev = mesh.devices.size
+
+    per_dev_bytes = getattr(mem, "temp_size_in_bytes", 0) + \
+        getattr(mem, "argument_size_in_bytes", 0) + \
+        getattr(mem, "output_size_in_bytes", 0)
+    rec.update(
+        status="ok",
+        kind=prog.kind,
+        seconds=round(time.time() - t0, 1),
+        n_devices=int(n_dev),
+        hlo_flops=float(cost.get("flops", 0.0)),
+        hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+        arg_bytes_per_dev=int(getattr(mem, "argument_size_in_bytes", 0)),
+        temp_bytes_per_dev=int(getattr(mem, "temp_size_in_bytes", 0)),
+        out_bytes_per_dev=int(getattr(mem, "output_size_in_bytes", 0)),
+        peak_bytes_per_dev=int(per_dev_bytes),
+        collective_bytes=int(coll.get("total", 0)),
+        collective_count=int(coll.get("count", 0)),
+        collective_breakdown={k: int(v) for k, v in coll.items()
+                              if k not in ("total", "count")},
+        collective_schedule=collective_schedule(hlo),
+        model_flops=float(prog.model_flops),
+        model_bytes=float(prog.model_bytes),
+    )
+    if probes:
+        pc = probe_costs(arch, arch_id, shape_id, multi_pod,
+                         optimized=optimized)
+        if pc:
+            rec["probe_flops"] = pc["flops"]
+            rec["probe_bytes"] = pc["bytes"]
+            rec["probe_collective_bytes"] = pc["coll"]
+            rec["probe_method"] = pc["method"]
+        else:   # loop-free program: the direct costs are already exact
+            rec["probe_flops"] = rec["hlo_flops"]
+            rec["probe_bytes"] = rec["hlo_bytes"]
+            rec["probe_collective_bytes"] = float(rec["collective_bytes"])
+            rec["probe_method"] = "loop-free-direct"
+    if verbose:
+        print(f"[{arch_id} x {shape_id} x {rec['mesh']}] OK "
+              f"({rec['seconds']}s)")
+        print(f"  memory/device: args={rec['arg_bytes_per_dev']/2**30:.2f}GiB "
+              f"temp={rec['temp_bytes_per_dev']/2**30:.2f}GiB "
+              f"out={rec['out_bytes_per_dev']/2**30:.2f}GiB")
+        print(f"  HLO flops={rec['hlo_flops']:.3e} "
+              f"bytes={rec['hlo_bytes']:.3e} "
+              f"collective={rec['collective_bytes']/2**20:.1f}MiB "
+              f"({rec['collective_count']} ops)")
+        print(f"  schedule: {rec['collective_schedule'][:4]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape id (default: all)")
+    ap.add_argument("--multi-pod", choices=("no", "yes", "both"),
+                    default="both")
+    ap.add_argument("--optimized", action="store_true",
+                    help="build with the beyond-paper optimizations on")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    arch_ids = [args.arch] if args.arch else list(ARCHS)
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    records = []
+    failures = 0
+
+    def flush():
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+
+    for aid in arch_ids:
+        shape_ids = [args.shape] if args.shape else \
+            get_arch(aid).shape_ids()
+        for sid in shape_ids:
+            for mp in pods:
+                try:
+                    # cost probes only on the single-pod mesh — the
+                    # roofline table is single-pod (assignment §ROOFLINE)
+                    records.append(run_cell(aid, sid, mp, probes=not mp,
+                                            optimized=args.optimized))
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    traceback.print_exc()
+                    records.append(dict(arch=aid, shape=sid,
+                                        mesh="2x16x16" if mp else "16x16",
+                                        status="error", error=str(e)[:500]))
+                flush()
+    ok = sum(1 for r in records if r["status"] == "ok")
+    sk = sum(1 for r in records if r["status"] == "skipped")
+    print(f"\n== dry-run: {ok} ok / {sk} skipped / {failures} failed "
+          f"-> {args.out}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (required by the dry-run contract: only dryrun.py
+sets the 512-placeholder-device XLA flag)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (= 256 chips, one v5e pod) or 2x16x16 (= 512 chips, two pods).
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    The "pod" axis carries only data-parallel traffic (gradient
+    all-reduce over DCN); "model" carries TP/EP collectives on ICI.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(k: int):
+    """Small helper mesh for single-host multi-device runs (tests)."""
+    return jax.make_mesh((k,), ("data",))

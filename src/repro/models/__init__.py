@@ -1,0 +1,4 @@
+from . import bert4rec, transformer
+from . import gnn
+
+__all__ = ["bert4rec", "transformer", "gnn"]

@@ -1,0 +1,215 @@
+"""BERT4Rec (arXiv:1904.06690): bidirectional transformer over item
+sequences with a masked-item (Cloze) objective, plus the three serving
+paths of the assigned shape set (online p99, offline bulk, retrieval
+against ~1M candidates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..recsys.embedding import embedding_lookup
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000     # embedding-table rows (incl. PAD=0, MASK=1)
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff_mult: int = 4
+    dtype: Any = jnp.float32
+    # beyond-paper serving optimization: two-stage top-k over the
+    # model-sharded item axis (local top-k per shard, then a tiny global
+    # top-k) — avoids all-gathering [chunk, n_items] logits per chunk.
+    topk_ways: int = 0
+
+    MASK: int = 1
+    PAD: int = 0
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 2 * d * (d * self.d_ff_mult) + 4 * d
+        return self.n_items * d + self.seq_len * d + \
+            self.n_blocks * per_block + 2 * d
+
+
+def init_params(cfg: Bert4RecConfig, key) -> Params:
+    d = cfg.embed_dim
+    ks = jax.random.split(key, 3 + cfg.n_blocks)
+
+    def blk(k):
+        kk = jax.random.split(k, 6)
+        s = 1.0 / jnp.sqrt(d)
+        return dict(
+            ln1=jnp.ones((d,), cfg.dtype), ln2=jnp.ones((d,), cfg.dtype),
+            wqkv=(jax.random.normal(kk[0], (d, 3 * d)) * s).astype(cfg.dtype),
+            wo=(jax.random.normal(kk[1], (d, d)) * s).astype(cfg.dtype),
+            w1=(jax.random.normal(kk[2], (d, cfg.d_ff_mult * d)) * s).astype(cfg.dtype),
+            w2=(jax.random.normal(kk[3], (cfg.d_ff_mult * d, d)) *
+                (1.0 / jnp.sqrt(cfg.d_ff_mult * d))).astype(cfg.dtype),
+        )
+
+    blocks = jax.vmap(blk)(jax.random.split(ks[2], cfg.n_blocks))
+    return dict(
+        item_embed=(jax.random.normal(ks[0], (cfg.n_items, d)) * 0.02
+                    ).astype(cfg.dtype),
+        pos_embed=(jax.random.normal(ks[1], (cfg.seq_len, d)) * 0.02
+                   ).astype(cfg.dtype),
+        ln_f=jnp.ones((d,), cfg.dtype),
+        blocks=blocks,
+    )
+
+
+def _ln(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def encode(cfg: Bert4RecConfig, params: Params, items) -> jax.Array:
+    """items [B, S] int32 -> hidden states [B, S, d].  Bidirectional
+    attention with PAD masking (encoder-only: no causal mask, no decode)."""
+    B, S = items.shape
+    d, h = cfg.embed_dim, cfg.n_heads
+    dh = d // h
+    x = embedding_lookup(params["item_embed"], items)
+    x = x + params["pos_embed"][None, :S, :]
+    pad = items == cfg.PAD                                  # [B, S]
+
+    def blk(x, p):
+        hx = _ln(x, p["ln1"])
+        qkv = hx @ p["wqkv"]
+        q, k, v = [z.reshape(B, S, h, dh)
+                   for z in jnp.split(qkv, 3, axis=-1)]
+        scores = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(
+            jnp.array(dh, jnp.float32)).astype(x.dtype)
+        scores = scores.astype(jnp.float32)
+        live = ~pad[:, None, None, :]
+        smax = jnp.max(jnp.where(live, scores, -1e30), axis=-1,
+                       keepdims=True)
+        smax = jnp.maximum(smax, -1e30)
+        # clamp the exp *input* (not output): exp of the untaken branch
+        # would compute inf and poison the vjp with inf * 0 = nan
+        ex = jnp.exp(jnp.where(live, scores - smax, -1e4))
+        probs = (ex / jnp.maximum(jnp.sum(ex, axis=-1, keepdims=True),
+                                  1e-9)).astype(x.dtype)
+        att = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, d)
+        x = x + att @ p["wo"]
+        hx = _ln(x, p["ln2"])
+        x = x + jax.nn.gelu(hx @ p["w1"]) @ p["w2"]
+        return x, None
+
+    # unrolled (2 blocks): keeps XLA cost_analysis exact for the dry-run
+    x, _ = jax.lax.scan(blk, x, params["blocks"], unroll=cfg.n_blocks)
+    return _ln(x, params["ln_f"])
+
+
+def masked_item_loss(cfg: Bert4RecConfig, params: Params, items, targets,
+                     mask) -> jax.Array:
+    """Cloze objective: items with MASK tokens, targets the original ids,
+    mask [B, S] bool marking positions to predict."""
+    hidden = encode(cfg, params, items)                      # [B, S, d]
+    logits = (hidden @ params["item_embed"].T).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def sampled_masked_loss(cfg: Bert4RecConfig, params: Params, items,
+                        mask_positions, targets, negatives) -> jax.Array:
+    """Production-scale Cloze loss: gather the masked positions, score
+    against (shared) sampled negatives + the gold item instead of the full
+    1M-row softmax (sampled softmax a la Covington/Yi et al.).
+
+    items [B, S]; mask_positions [B, M] (indices into S); targets [B, M];
+    negatives [n_neg] shared item ids.
+    """
+    hidden = encode(cfg, params, items)                       # [B, S, d]
+    h = jnp.take_along_axis(hidden, mask_positions[..., None], axis=1)
+    neg_vecs = embedding_lookup(params["item_embed"], negatives)   # [n, d]
+    pos_vecs = embedding_lookup(params["item_embed"], targets)     # [B, M, d]
+    neg_logits = jnp.einsum("bmd,nd->bmn", h, neg_vecs).astype(jnp.float32)
+    pos_logit = jnp.sum(h * pos_vecs, axis=-1).astype(jnp.float32)
+    logits = jnp.concatenate([pos_logit[..., None], neg_logits], axis=-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(logz - pos_logit)
+
+
+def _topk_scores(cfg: Bert4RecConfig, scores, k: int):
+    """Exact top-k; with cfg.topk_ways, two-stage over the sharded item
+    axis: per-shard top-k runs locally, only [rows, ways*k] crosses the
+    network instead of [rows, n_items]."""
+    if not cfg.topk_ways:
+        return jax.lax.top_k(scores, k)
+    from ..launch.constraints import hint
+    rows, V = scores.shape
+    W = cfg.topk_ways
+    assert V % W == 0
+    # GSPMD's sort partitioner all-gathers the operand regardless of
+    # layout hints (measured: §Perf); shard_map makes the per-shard top_k
+    # *local by construction*.  Falls back to plain top_k with no mesh.
+    s3 = scores.reshape(rows, W, V // W).transpose(1, 0, 2)   # [W, rows, .]
+
+    def _local(block):           # [W/shards, rows, V/W] per device
+        return jax.lax.top_k(block, k)
+
+    try:
+        from jax.sharding import PartitionSpec as _P
+        # ways on "model", rows stay on "data": replicating either axis
+        # forces a full-logits all-gather (measured, §Perf)
+        spec = _P("model", "data", None)
+        s3c = hint(s3, "model", "data", None)
+        v_loc, i_loc = jax.shard_map(
+            _local, in_specs=spec, out_specs=(spec, spec))(s3c)
+    except Exception:            # no mesh context (single-device paths)
+        v_loc, i_loc = jax.lax.top_k(s3, k)
+    i_loc = i_loc + (jnp.arange(W) * (V // W))[:, None, None]
+    v_all = v_loc.transpose(1, 0, 2).reshape(rows, W * k)
+    i_all = i_loc.transpose(1, 0, 2).reshape(rows, W * k)
+    v, j = jax.lax.top_k(v_all, k)                        # tiny global pass
+    return v, jnp.take_along_axis(i_all, j, axis=1)
+
+
+def score_topk(cfg: Bert4RecConfig, params: Params, items, k: int = 100,
+               chunk: int = 4096):
+    """Offline bulk scoring: top-k items per row, batch processed in chunks
+    so the [chunk, n_items] logits block — not [B, n_items] — is the peak
+    intermediate.  items [B, S] with B % chunk == 0."""
+    B, S = items.shape
+    if B <= chunk:
+        return _topk_scores(cfg, score_next(cfg, params, items), k)
+    chunks = items.reshape(B // chunk, chunk, S)
+
+    def one(ch):
+        return _topk_scores(cfg, score_next(cfg, params, ch), k)
+
+    vals, idx = jax.lax.map(one, chunks)
+    return vals.reshape(B, k), idx.reshape(B, k)
+
+
+def score_next(cfg: Bert4RecConfig, params: Params, items) -> jax.Array:
+    """Serving: append MASK, score all items.  items [B, S] -> [B, n_items].
+    Used by serve_p99 (B=512) and serve_bulk (B=262144)."""
+    hidden = encode(cfg, params, items)
+    last = hidden[:, -1, :]                                   # MASK position
+    return last @ params["item_embed"].T
+
+
+def score_candidates(cfg: Bert4RecConfig, params: Params, items,
+                     candidates) -> jax.Array:
+    """Retrieval: one query against a candidate set (batched dot, no loop).
+    items [1, S]; candidates [n_cand] -> scores [n_cand]."""
+    hidden = encode(cfg, params, items)
+    q = hidden[:, -1, :]                                      # [1, d]
+    cand_vecs = embedding_lookup(params["item_embed"], candidates)
+    return (cand_vecs @ q[0]).astype(jnp.float32)

@@ -1,0 +1,5 @@
+from .common import GraphData, pad_graph, segment_mp, edge_softmax
+from . import common, e3, egnn, equivariant, gat, sampler
+
+__all__ = ["GraphData", "pad_graph", "segment_mp", "edge_softmax",
+           "common", "e3", "egnn", "equivariant", "gat", "sampler"]

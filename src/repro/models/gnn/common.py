@@ -1,0 +1,103 @@
+"""GNN substrate: padded COO graphs + segment-op message passing.
+
+JAX sparse is BCOO-only, so message passing is built on edge-index
+gather -> ``jax.ops.segment_sum``/``segment_max`` scatter (this IS the
+system's SpMM layer; the same segment machinery backs the paper engine's
+frontier propagation and the recsys EmbeddingBag).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GraphData:
+    """Static-shape padded (batched) graph.
+
+    Padding convention: pad edges point at node slot n_node-1 with
+    edge_mask False; pad nodes have node_mask False.
+    """
+    senders: Any      # [E] int32
+    receivers: Any    # [E] int32
+    node_mask: Any    # [N] bool
+    edge_mask: Any    # [E] bool
+    graph_ids: Any    # [N] int32 (disjoint-union batching; 0 if single)
+    n_graphs: int = 1
+
+
+def segment_mp(messages, receivers, n_nodes: int, reduce: str = "sum"):
+    """Aggregate edge messages onto receiver nodes."""
+    if reduce == "sum":
+        return jax.ops.segment_sum(messages, receivers, num_segments=n_nodes)
+    if reduce == "max":
+        return jax.ops.segment_max(messages, receivers, num_segments=n_nodes)
+    if reduce == "mean":
+        s = jax.ops.segment_sum(messages, receivers, num_segments=n_nodes)
+        c = jax.ops.segment_sum(jnp.ones(messages.shape[0], jnp.float32),
+                                receivers, num_segments=n_nodes)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    raise ValueError(reduce)
+
+
+def edge_softmax(scores, receivers, edge_mask, n_nodes: int):
+    """Numerically-stable softmax over incoming edges of each node.
+    scores [E, H] -> alpha [E, H]."""
+    scores = jnp.where(edge_mask[:, None], scores, -jnp.inf)
+    smax = jax.ops.segment_max(scores, receivers, num_segments=n_nodes)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[receivers]) * edge_mask[:, None]
+    denom = jax.ops.segment_sum(ex, receivers, num_segments=n_nodes)
+    return ex / jnp.maximum(denom[receivers], 1e-9)
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    ks = jax.random.split(key, len(sizes) - 1)
+    return [dict(w=(jax.random.normal(k, (a, b)) / np.sqrt(a)).astype(dtype),
+                 b=jnp.zeros((b,), dtype))
+            for k, (a, b) in zip(ks, zip(sizes[:-1], sizes[1:]))]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def graph_readout(node_vals, graph_ids, n_graphs: int, node_mask,
+                  reduce: str = "sum"):
+    """Pool node values per graph (molecule batching)."""
+    vals = node_vals * node_mask[:, None]
+    if reduce == "sum":
+        return jax.ops.segment_sum(vals, graph_ids, num_segments=n_graphs)
+    if reduce == "mean":
+        s = jax.ops.segment_sum(vals, graph_ids, num_segments=n_graphs)
+        c = jax.ops.segment_sum(node_mask.astype(jnp.float32), graph_ids,
+                                num_segments=n_graphs)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    raise ValueError(reduce)
+
+
+def pad_graph(senders, receivers, n_nodes: int, e_max: int, n_max: int,
+              graph_ids: Optional[np.ndarray] = None, n_graphs: int = 1):
+    """Host-side padding to static shapes."""
+    E = len(senders)
+    assert E <= e_max and n_nodes <= n_max
+    s = np.full(e_max, n_max - 1, np.int32)
+    r = np.full(e_max, n_max - 1, np.int32)
+    s[:E], r[:E] = senders, receivers
+    node_mask = np.zeros(n_max, bool)
+    node_mask[:n_nodes] = True
+    edge_mask = np.zeros(e_max, bool)
+    edge_mask[:E] = True
+    gi = np.zeros(n_max, np.int32)
+    if graph_ids is not None:
+        gi[:n_nodes] = graph_ids
+    return GraphData(jnp.asarray(s), jnp.asarray(r), jnp.asarray(node_mask),
+                     jnp.asarray(edge_mask), jnp.asarray(gi), n_graphs)

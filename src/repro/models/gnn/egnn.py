@@ -1,0 +1,93 @@
+"""EGNN (arXiv:2102.09844): E(n)-equivariant message passing without
+spherical harmonics — scalar-distance MLP messages + coordinate updates.
+
+Assigned config: 4 layers, d_hidden 64.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphData, graph_readout, mlp_apply, mlp_init, segment_mp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    name: str = "egnn"
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 16
+    dtype: Any = jnp.float32
+
+    def n_params(self) -> int:
+        d = self.d_hidden
+        per = (2 * d + 1) * d + d * d + d * d + d + (2 * d) * d + d * d
+        return self.d_in * d + self.n_layers * per + d
+
+
+def init_params(cfg: EGNNConfig, key) -> Params:
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 2)
+
+    def layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return dict(
+            phi_e=mlp_init(k1, [2 * d + 1, d, d], cfg.dtype),
+            phi_x=mlp_init(k2, [d, d, 1], cfg.dtype),
+            phi_h=mlp_init(k3, [2 * d, d, d], cfg.dtype),
+        )
+
+    layers = jax.vmap(layer)(jax.random.split(ks[0], cfg.n_layers))
+    return dict(
+        embed=mlp_init(ks[1], [cfg.d_in, d], cfg.dtype),
+        layers=layers,
+        readout=mlp_init(ks[2], [d, d, 1], cfg.dtype),
+    )
+
+
+def _layer(p, h, x, g: GraphData):
+    N = h.shape[0]
+    src, dst = g.senders, g.receivers
+    diff = x[src] - x[dst]                                   # [E, 3]
+    d2 = jnp.sum(diff * diff, axis=-1, keepdims=True)        # [E, 1]
+    m = mlp_apply(p["phi_e"], jnp.concatenate([h[src], h[dst], d2], -1),
+                  final_act=True)                            # [E, d]
+    m = m * g.edge_mask[:, None]
+    # coordinate update (mean-normalized for stability)
+    cw = mlp_apply(p["phi_x"], m)                            # [E, 1]
+    xmsg = diff * cw * g.edge_mask[:, None]
+    x = x + segment_mp(xmsg, dst, N, "mean")
+    # feature update
+    agg = segment_mp(m, dst, N)
+    h = h + mlp_apply(p["phi_h"], jnp.concatenate([h, agg], -1))
+    return h, x
+
+
+def forward(cfg: EGNNConfig, params: Params, feats, coords,
+            g: GraphData) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (per-graph energy [G], node features [N, d], coords [N, 3])."""
+    h = mlp_apply(params["embed"], feats)
+
+    def body(carry, p):
+        h, x = carry
+        h, x = _layer(p, h, x, g)
+        return (h, x), None
+
+    # unrolled (<=5 layers): keeps XLA cost_analysis exact for the dry-run
+    (h, x), _ = jax.lax.scan(body, (h, coords), params["layers"],
+                             unroll=cfg.n_layers)
+    node_e = mlp_apply(params["readout"], h)                 # [N, 1]
+    energy = graph_readout(node_e, g.graph_ids, g.n_graphs, g.node_mask)
+    return energy[:, 0], h, x
+
+
+def energy_and_forces(cfg: EGNNConfig, params: Params, feats, coords, g):
+    def e_fn(c):
+        return jnp.sum(forward(cfg, params, feats, c, g)[0])
+    e, neg_f = jax.value_and_grad(e_fn)(coords)
+    return e, -neg_f

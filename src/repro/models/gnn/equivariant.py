@@ -1,0 +1,250 @@
+"""NequIP (arXiv:2101.03164) and MACE (arXiv:2206.07697) on the e3 library.
+
+Structurally faithful JAX implementations:
+* NequIP: per-layer equivariant convolution — neighbor irreps (x) SH of the
+  edge direction through CG paths, radial-MLP path weights, segment-sum
+  aggregation, per-l self-interaction, gated nonlinearity.
+* MACE: per-layer density A (one-hop conv), then *higher-order* symmetric
+  tensor-power contractions B up to correlation order nu=3 (the paper's
+  ACE-style product basis), linear message, residual update, per-layer
+  scalar readouts summed into the site energy.
+
+Uniform channel width per l keeps parameter bookkeeping simple (noted in
+DESIGN.md); equivariance is property-tested in tests/test_gnn.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import GraphData, graph_readout, mlp_apply, mlp_init
+from .e3 import (bessel_rbf, irreps_zeros, linear_mix, real_clebsch_gordan,
+                 self_tensor_product, spherical_harmonics)
+
+Params = Dict[str, Any]
+
+
+def _paths(l_max: int) -> List[Tuple[int, int, int]]:
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                out.append((l1, l2, l3))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EquivariantConfig:
+    name: str = "nequip"
+    arch: str = "nequip"          # "nequip" | "mace"
+    n_layers: int = 5
+    channels: int = 32            # d_hidden
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    correlation: int = 3          # MACE only
+    n_species: int = 8
+    dtype: Any = jnp.float32
+    # beyond-paper distributed optimization: one fused, bf16,
+    # output-sharded aggregation per output l instead of 15 f32 per-path
+    # segment_sums (each of which all-reduces a full node array).
+    fused_agg: bool = False
+    shard_axes: tuple = ()        # flat mesh axes carrying nodes/edges
+
+    def n_params(self) -> int:
+        C, P = self.channels, len(_paths(self.l_max))
+        per_layer = P * self.n_rbf * C
+        per_layer += (self.l_max + 1) * (C * P) * C          # mix
+        per_layer += self.l_max * C * C + C * C              # gates
+        if self.arch == "mace":
+            per_layer += (self.correlation - 1) * (self.l_max + 1) * 4 * C * C
+            per_layer += C * 1
+        return self.n_species * C + self.n_layers * per_layer + C
+
+
+def _conv_init(cfg: EquivariantConfig, key) -> Params:
+    C = cfg.channels
+    paths = _paths(cfg.l_max)
+    ks = jax.random.split(key, len(paths) + cfg.l_max + 3)
+    p: Params = {}
+    for i, (l1, l2, l3) in enumerate(paths):
+        p[f"rad_{l1}{l2}{l3}"] = (
+            jax.random.normal(ks[i], (cfg.n_rbf, C)) / np.sqrt(cfg.n_rbf)
+        ).astype(cfg.dtype)
+    # per-l mixing weights: [C * n_paths_to_l, C]
+    per_l = {l: sum(1 for (_, _, l3) in paths if l3 == l)
+             for l in range(cfg.l_max + 1)}
+    for l in range(cfg.l_max + 1):
+        p[f"mix_{l}"] = (jax.random.normal(ks[len(paths) + l],
+                                           (C * per_l[l], C)) /
+                         np.sqrt(C * per_l[l])).astype(cfg.dtype)
+    # gates for l > 0
+    p["gate_w"] = (jax.random.normal(ks[-1], (C, cfg.l_max * C)) /
+                   np.sqrt(C)).astype(cfg.dtype)
+    return p
+
+
+def _conv_apply(cfg: EquivariantConfig, p: Params, feats, coords,
+                g: GraphData):
+    """One equivariant convolution; returns aggregated {l: [N, C, m]}."""
+    N = coords.shape[0]
+    src, dst = g.senders, g.receivers
+    vec = coords[src] - coords[dst]
+    # safe norm (zero gradient at r=0; forces differentiate through this)
+    r = jnp.sqrt(jnp.maximum(jnp.sum(vec * vec, axis=-1), 1e-18))
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff) * g.edge_mask[:, None]
+    sh = spherical_harmonics(vec, cfg.l_max)
+
+    if cfg.fused_agg:
+        from ...launch.constraints import hint
+        ax = cfg.shard_axes or None
+        # pure-bf16 message path: mixed-precision einsums make XLA hoist
+        # f32 converts ABOVE the node-array gathers, silently restoring
+        # f32 all-gathers (§Perf iteration 2 lesson)
+        bf = jnp.bfloat16
+        sh_b = {l: v.astype(bf) for l, v in sh.items()}
+        rbf_b = rbf.astype(bf)
+        per_l = {l: [] for l in range(cfg.l_max + 1)}
+        for (l1, l2, l3) in _paths(cfg.l_max):
+            w = rbf_b @ p[f"rad_{l1}{l2}{l3}"].astype(bf)
+            fa = feats[l1].astype(bf)[src]
+            cg = jnp.asarray(real_clebsch_gordan(l1, l2, l3), bf)
+            msg = jnp.einsum("eci,ej,ijk,ec->eck", fa, sh_b[l2], cg, w)
+            per_l[l3].append(msg)
+        stacked = {}
+        for l3, msgs in per_l.items():
+            cat = jnp.concatenate(msgs, axis=1)               # [E, P*C, m]
+            if ax:
+                cat = hint(cat, ax, None, None)
+            agg = jax.ops.segment_sum(cat, dst, num_segments=N)
+            if ax:
+                agg = hint(agg, ax, None, None)               # node-sharded
+            Pn = len(msgs)
+            C = msgs[0].shape[1]
+            # stay bf16: promoting here would re-widen every node-array
+            # collective downstream (§Perf iteration 3)
+            agg = agg.reshape(N, Pn, C, 2 * l3 + 1)
+            stacked[l3] = jnp.transpose(agg, (0, 2, 1, 3))    # [N, C, P, m]
+        return linear_mix(stacked, {l: p[f"mix_{l}"]
+                                    for l in range(cfg.l_max + 1)})
+
+    agg = {l: [] for l in range(cfg.l_max + 1)}
+    for (l1, l2, l3) in _paths(cfg.l_max):
+        w = rbf @ p[f"rad_{l1}{l2}{l3}"]                      # [E, C]
+        fa = feats[l1][src]                                   # [E, C, m1]
+        cg = jnp.asarray(real_clebsch_gordan(l1, l2, l3), cfg.dtype)
+        msg = jnp.einsum("eci,ej,ijk,ec->eck", fa, sh[l2], cg, w)
+        out = jax.ops.segment_sum(msg, dst, num_segments=N)
+        agg[l3].append(out)
+    stacked = {l: jnp.stack(v, axis=2) for l, v in agg.items()}  # [N,C,P,m]
+    return linear_mix(stacked, {l: p[f"mix_{l}"]
+                                for l in range(cfg.l_max + 1)})
+
+
+def _gate(cfg: EquivariantConfig, p: Params, feats):
+    """Equivariant gated nonlinearity: silu on scalars, sigmoid(scalar)
+    gates on the norms of l>0 features."""
+    scalars = feats[0][..., 0]                                # [N, C]
+    out = {0: jax.nn.silu(scalars)[..., None]}
+    if cfg.l_max > 0:
+        gates = jax.nn.sigmoid(scalars @ p["gate_w"])         # [N, l_max*C]
+        C = cfg.channels
+        for l in range(1, cfg.l_max + 1):
+            gl = gates[:, (l - 1) * C: l * C]
+            out[l] = feats[l] * gl[..., None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: EquivariantConfig, key) -> Params:
+    C = cfg.channels
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        lp = _conv_init(cfg, ks[i])
+        if cfg.arch == "mace":
+            kk = jax.random.split(ks[i], 2 * (cfg.correlation - 1) *
+                                  (cfg.l_max + 1) + 2)
+            j = 0
+            for nu in range(2, cfg.correlation + 1):
+                per_l = {l: 0 for l in range(cfg.l_max + 1)}
+                for (l1, l2, l3) in _paths(cfg.l_max):
+                    per_l[l3] += 1
+                for l in range(cfg.l_max + 1):
+                    lp[f"bmix_{nu}_{l}"] = (
+                        jax.random.normal(kk[j], (C * per_l[l], C)) /
+                        np.sqrt(C * per_l[l])).astype(cfg.dtype)
+                    j += 1
+            lp["readout"] = (jax.random.normal(kk[-1], (C, 1)) /
+                             np.sqrt(C)).astype(cfg.dtype)
+        layers.append(lp)
+    p = dict(
+        embed=(jax.random.normal(ks[-2], (cfg.n_species, C)) * 0.5
+               ).astype(cfg.dtype),
+        layers=layers,
+        readout=mlp_init(ks[-1], [C, C, 1], cfg.dtype),
+    )
+    return p
+
+
+def forward(cfg: EquivariantConfig, params: Params, species, coords,
+            g: GraphData):
+    """species [N] int32, coords [N, 3] -> per-graph energy [G]."""
+    N = coords.shape[0]
+    C = cfg.channels
+    # fused/distributed mode carries features in bf16: gathers of the node
+    # array and their backward all-reduces are the dominant collective
+    # traffic at ogb_products scale (§Perf iteration 2) — halving the word
+    # size halves it; the energy readout accumulates in f32.
+    fdtype = jnp.bfloat16 if cfg.fused_agg else cfg.dtype
+    feats = irreps_zeros(N, C, cfg.l_max, fdtype)
+    # cast the (small) table BEFORE the take: converting the [N, C] node
+    # array after the gather would leave f32 node traffic in the program
+    feats[0] = jnp.take(params["embed"].astype(fdtype), species,
+                        axis=0)[..., None]
+
+    energy_acc = jnp.zeros((N, 1), cfg.dtype)
+    for lp in params["layers"]:
+        if cfg.fused_agg:
+            # cast layer params (small) once: keeps every node-array op —
+            # and hence every collective — bf16-pure
+            lp = jax.tree.map(lambda x: x.astype(fdtype), lp)
+        conv = _conv_apply(cfg, lp, feats, coords, g)
+        if cfg.arch == "mace":
+            # higher-order ACE product basis: B_nu = sym. powers of A
+            A = conv
+            B = A
+            msg = {l: A[l] for l in range(cfg.l_max + 1)}
+            for nu in range(2, cfg.correlation + 1):
+                prod = self_tensor_product(B, A, cfg.l_max)   # [N,C,P,m]
+                B = linear_mix(prod, {l: lp[f"bmix_{nu}_{l}"]
+                                      for l in range(cfg.l_max + 1)})
+                msg = {l: msg[l] + B[l] for l in msg}
+            feats = {l: feats[l] + msg[l] for l in feats}
+            feats = _gate(cfg, lp, feats)
+            energy_acc = energy_acc + \
+                (feats[0][..., 0].astype(cfg.dtype) @ lp["readout"])
+        else:
+            feats = {l: feats[l] + conv[l] for l in feats}
+            feats = _gate(cfg, lp, feats)
+        # keep the carried node arrays in the low-precision format
+        feats = {l: v.astype(fdtype) for l, v in feats.items()}
+
+    node_e = mlp_apply(params["readout"],
+                       feats[0][..., 0].astype(cfg.dtype))    # [N, 1]
+    node_e = node_e + energy_acc
+    energy = graph_readout(node_e, g.graph_ids, g.n_graphs, g.node_mask)
+    return energy[:, 0]
+
+
+def energy_and_forces(cfg: EquivariantConfig, params: Params, species,
+                      coords, g: GraphData):
+    def e_fn(c):
+        return jnp.sum(forward(cfg, params, species, c, g))
+    e, neg_f = jax.value_and_grad(e_fn)(coords)
+    return e, -neg_f

@@ -1,0 +1,78 @@
+"""GAT (arXiv:1710.10903): SDDMM edge scores -> segment softmax -> SpMM.
+
+gat-cora assigned config: 2 layers, d_hidden 8, 8 heads, attn aggregator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import GraphData, edge_softmax, segment_mp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+
+    def n_params(self) -> int:
+        p = self.d_in * self.d_hidden * self.n_heads + 2 * self.n_heads * self.d_hidden
+        p += (self.d_hidden * self.n_heads) * self.n_classes * 1 + 2 * self.n_classes
+        return p
+
+
+def init_params(cfg: GATConfig, key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h, dh = cfg.n_heads, cfg.d_hidden
+    return dict(
+        w1=(jax.random.normal(k1, (cfg.d_in, h * dh)) / np.sqrt(cfg.d_in)
+            ).astype(cfg.dtype),
+        a1_src=(jax.random.normal(k2, (h, dh)) * 0.1).astype(cfg.dtype),
+        a1_dst=(jax.random.normal(k3, (h, dh)) * 0.1).astype(cfg.dtype),
+        w2=(jax.random.normal(k4, (h * dh, cfg.n_classes)) /
+            np.sqrt(h * dh)).astype(cfg.dtype),
+        a2_src=(jax.random.normal(k2, (1, cfg.n_classes)) * 0.1).astype(cfg.dtype),
+        a2_dst=(jax.random.normal(k3, (1, cfg.n_classes)) * 0.1).astype(cfg.dtype),
+    )
+
+
+def _gat_layer(x, g: GraphData, w, a_src, a_dst, n_heads):
+    """x [N, d_in] -> [N, H, dh]."""
+    N = x.shape[0]
+    h = (x @ w).reshape(N, n_heads, -1)                       # [N, H, dh]
+    s_src = jnp.einsum("nhd,hd->nh", h, a_src)
+    s_dst = jnp.einsum("nhd,hd->nh", h, a_dst)
+    scores = jax.nn.leaky_relu(s_src[g.senders] + s_dst[g.receivers], 0.2)
+    alpha = edge_softmax(scores, g.receivers, g.edge_mask, N)  # [E, H]
+    msgs = h[g.senders] * alpha[..., None]
+    return segment_mp(msgs.reshape(msgs.shape[0], -1), g.receivers, N
+                      ).reshape(N, n_heads, -1)
+
+
+def forward(cfg: GATConfig, params: Params, x, g: GraphData) -> jax.Array:
+    """Node classification logits [N, n_classes]."""
+    h = _gat_layer(x, g, params["w1"], params["a1_src"], params["a1_dst"],
+                   cfg.n_heads)
+    h = jax.nn.elu(h.reshape(x.shape[0], -1))
+    out = _gat_layer(h, g, params["w2"], params["a2_src"], params["a2_dst"], 1)
+    return out[:, 0, :]
+
+
+def loss(cfg: GATConfig, params: Params, x, g: GraphData, labels,
+         label_mask) -> jax.Array:
+    logits = forward(cfg, params, x, g).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (logz - gold) * label_mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(label_mask), 1.0)

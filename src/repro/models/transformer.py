@@ -1,0 +1,583 @@
+"""Decoder-only LM family: dense + MoE, GQA, RoPE (incl. partial/2d),
+QKV bias, sliding-window attention, SwiGLU — pure JAX, scan-over-layers
+with remat, KV-cache prefill/decode.
+
+One parameterized implementation covers the five assigned LM architectures
+(olmoe-1b-7b, mixtral-8x7b, qwen1.5-32b, qwen2-1.5b, chatglm3-6b); see
+``repro/configs/``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    vocab: int = 256
+    qkv_bias: bool = False
+    rope_pct: float = 1.0          # chatglm3 uses 0.5 ("2d" rotary)
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None   # mixtral SWA
+    # MoE (dense model when n_experts == 0)
+    n_experts: int = 0
+    top_k: int = 2
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    tie_embeddings: bool = True
+    dtype: Any = jnp.float32       # activation/param dtype (bf16 on TPU)
+    remat: bool = True
+    # serving-path options (production features for the decode_* cells):
+    kv_quant_int8: bool = False    # int8 KV cache + per-(slot,head) scales
+    decode_chunk: Optional[int] = None  # online-softmax chunked cache attn
+    # blockwise (flash-style, pure-XLA) attention for long prefill/train;
+    # only causal (i, j<=i) — and, with SWA, in-window — block pairs are
+    # materialized, so memory is O(chunk^2) and FLOPs skip masked blocks.
+    attn_chunk: Optional[int] = None
+    # fully unroll internal scans (dry-run cost probes: XLA cost_analysis
+    # counts loop bodies once, so probes lower loop-free programs)
+    unroll: bool = False
+    # beyond-paper distribution hints: pin q/k/v + attention carries to
+    # batch-sharded/model-replicated layouts.  With few KV heads (GQA 2)
+    # GSPMD otherwise invents head/sequence shardings whose dynamic slices
+    # trigger "involuntary full rematerialization" copies of whole caches.
+    dp_axes: tuple = ()           # mesh axes carrying the batch dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def n_params(self) -> int:
+        """Total parameter count N (for MODEL_FLOPS = 6*N*D)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * dh * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * self.d_ff_expert + d * self.n_experts
+        else:
+            mlp = 3 * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def n_active_params(self) -> int:
+        """Activated params per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        mlp = self.top_k * 3 * d * self.d_ff_expert + d * self.n_experts
+        per_layer = attn + mlp + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(shape[0]))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_layer(cfg: LMConfig, key) -> Params:
+    d, dh = cfg.d_model, cfg.d_head
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 12)
+    p = dict(
+        ln1=jnp.ones((d,), cfg.dtype),
+        ln2=jnp.ones((d,), cfg.dtype),
+        wq=_dense_init(ks[0], (d, hq * dh), cfg.dtype),
+        wk=_dense_init(ks[1], (d, hkv * dh), cfg.dtype),
+        wv=_dense_init(ks[2], (d, hkv * dh), cfg.dtype),
+        wo=_dense_init(ks[3], (hq * dh, d), cfg.dtype),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), cfg.dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), cfg.dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), cfg.dtype)
+    if cfg.is_moe:
+        e, ffe = cfg.n_experts, cfg.d_ff_expert
+        p["router"] = _dense_init(ks[4], (d, e), cfg.dtype)
+        p["w1"] = _dense_init(ks[5], (e, d, ffe), cfg.dtype)
+        p["w3"] = _dense_init(ks[6], (e, d, ffe), cfg.dtype)
+        p["w2"] = _dense_init(ks[7], (e, ffe, d), cfg.dtype)
+    else:
+        p["w1"] = _dense_init(ks[5], (d, cfg.d_ff), cfg.dtype)
+        p["w3"] = _dense_init(ks[6], (d, cfg.d_ff), cfg.dtype)
+        p["w2"] = _dense_init(ks[7], (cfg.d_ff, d), cfg.dtype)
+    return p
+
+
+def init_params(cfg: LMConfig, key) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(cfg, k))(layer_keys)
+    p = dict(
+        embed=_dense_init(k_emb, (cfg.vocab, cfg.d_model), cfg.dtype, 0.02),
+        ln_f=jnp.ones((cfg.d_model,), cfg.dtype),
+        layers=layers,
+    )
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(k_head, (cfg.d_model, cfg.vocab), cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x, positions, cfg: LMConfig):
+    """Rotary embedding on the leading rope_pct fraction of head dims.
+
+    x: [..., S, H, dh]; positions: [..., S] absolute positions.
+    rope_pct=0.5 reproduces chatglm3's 2d/partial rotary.
+    """
+    dh = x.shape[-1]
+    rot = int(dh * cfg.rope_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)        # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    x_rot = jnp.concatenate([x1 * cos - x2 * sin,
+                             x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([x_rot, x_pass], axis=-1)
+
+
+def _qkv(cfg: LMConfig, p: Params, x):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    return q, k, v
+
+
+def _blockwise_attention(cfg: LMConfig, q, k, v):
+    """Flash-style causal attention in pure XLA (lax.scan over the static
+    list of live (q-block, kv-block) pairs with an online softmax).
+
+    q [B, S, Hkv, G, dh]; k, v [B, S, Hkv, dh].  Positions are arange(S).
+    Only blocks with j <= i (causal) and, under SWA, (i-j)*C < window + C
+    are computed: long-context FLOPs/memory scale with the *visible* window,
+    not S^2.
+    """
+    B, S, H, G, dh = q.shape
+    C = cfg.attn_chunk
+    assert S % C == 0, (S, C)
+    n = S // C
+    pairs = [(i, j) for i in range(n) for j in range(i + 1)
+             if cfg.sliding_window is None
+             or (i - j) * C < cfg.sliding_window + C]
+    pi = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    pj = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    qc = q.reshape(B, n, C, H, G, dh)
+    kc = k.reshape(B, n, C, H, dh)
+    vc = v.reshape(B, n, C, H, dh)
+    inv_sqrt = 1.0 / jnp.sqrt(jnp.array(dh, jnp.float32))
+
+    def step(state, ij):
+        m, l, acc = state      # [n,B,H,G,C], [n,B,H,G,C], [n,B,H,G,C,dh]
+        i, j = ij
+        qb = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        if cfg.dp_axes:   # keep blocks batch-sharded; stop GSPMD resharding
+            qb, kb, vb = (_dp_hint(cfg, t) for t in (qb, kb, vb))
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * inv_sqrt
+        qpos = i * C + jnp.arange(C)
+        kpos = j * C + jnp.arange(C)
+        mask = kpos[None, :] <= qpos[:, None]
+        if cfg.sliding_window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < cfg.sliding_window
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        mi = m[i]
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))          # [B,H,G,C]
+        corr = jnp.where(jnp.isfinite(mi), jnp.exp(mi - m_new), 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l[i] * corr + jnp.sum(p, axis=-1)
+        acc_new = acc[i] * corr[..., None] + \
+            jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (m.at[i].set(m_new), l.at[i].set(l_new),
+                acc.at[i].set(acc_new)), None
+
+    m0 = jnp.full((n, B, H, G, C), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((n, B, H, G, C), jnp.float32)
+    a0 = jnp.zeros((n, B, H, G, C, dh), jnp.float32)
+    if cfg.dp_axes:
+        from ..launch.constraints import hint
+        m0 = hint(m0, None, cfg.dp_axes, None, None, None)
+        l0 = hint(l0, None, cfg.dp_axes, None, None, None)
+        a0 = hint(a0, None, cfg.dp_axes, None, None, None, None)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (pi, pj),
+                                  unroll=len(pairs) if cfg.unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # [n,B,H,G,C,dh]
+    out = jnp.moveaxis(out, 0, 1)                             # [B,n,H,G,C,dh]
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5))              # [B,n,C,H,G,dh]
+    return out.reshape(B, S, H * G * dh).astype(q.dtype)
+
+
+def _dp_hint(cfg: LMConfig, x, lead_batch: bool = True):
+    """Constrain: batch dim -> dp axes, everything else replicated."""
+    if not cfg.dp_axes:
+        return x
+    from ..launch.constraints import hint
+    spec = (cfg.dp_axes,) + (None,) * (x.ndim - 1)
+    return hint(x, *spec)
+
+
+def attention(cfg: LMConfig, p: Params, x, positions):
+    """Full (optionally sliding-window) causal self-attention, GQA."""
+    B, S, _ = x.shape
+    g = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, p, x)
+    q = rope(q, positions, cfg)
+    k = rope(k, positions, cfg)
+    q, k, v = _dp_hint(cfg, q), _dp_hint(cfg, k), _dp_hint(cfg, v)
+    if cfg.attn_chunk is not None and S > cfg.attn_chunk:
+        q = q.reshape(B, S, cfg.n_kv_heads, g, cfg.d_head)
+        return _blockwise_attention(cfg, q, k, v) @ p["wo"]
+    q = q.reshape(B, S, cfg.n_kv_heads, g, cfg.d_head)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / jnp.sqrt(
+        jnp.array(cfg.d_head, jnp.float32)).astype(x.dtype)
+    ti = positions[:, None, :]   # key positions   [B, 1, S]
+    si = positions[:, :, None]   # query positions [B, S, 1]
+    mask = ti <= si
+    if cfg.sliding_window is not None:
+        mask &= (si - ti) < cfg.sliding_window
+    scores = jnp.where(mask[:, None, None, :, :], scores.astype(jnp.float32),
+                       -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"]
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def moe_block(cfg: LMConfig, p: Params, x) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-bucketed top-k MoE with scatter/gather dispatch.
+
+    Returns (output, aux_load_balance_loss).  The classic GShard one-hot
+    dispatch materializes a [T, k, E, C] tensor — quadratic in tokens
+    (C ~ T/E), ~20 GB/device at olmoe's train shape — so routing here is
+    index-based: scatter token ids into the [E, C] capacity grid, gather
+    rows, run experts, gather results back.  All intermediates are linear
+    in T.  With experts sharded on "model" the gathers become the EP
+    collectives.
+    """
+    B, S, d = x.shape
+    T = B * S
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(max(1, (k * T * cfg.capacity_factor) // e))
+    xt = x.reshape(T, d)
+    logits = (xt @ p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                 # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_e = idx.reshape(-1)                                 # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)    # [T*k, E]
+    # arrival order within each expert = position in its capacity buffer
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1.0
+    pos = pos.astype(jnp.int32)                              # [T*k]
+    keep = pos < cap
+
+    # scatter kept (token, choice) pairs into the [E, C] grid (drop = OOB)
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    token_idx = jnp.full((e, cap), T, jnp.int32)             # T = pad row
+    token_idx = token_idx.at[flat_e, pos].set(tok_ids, mode="drop")
+
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])
+    expert_in = jnp.take(x_pad, token_idx, axis=0)           # [E, C, d]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w3"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w2"])      # [E, C, d]
+
+    # combine: each (token, choice) reads its expert row back
+    pos_c = jnp.minimum(pos, cap - 1)
+    vals = expert_out[flat_e, pos_c]                         # [T*k, d]
+    vals = vals * keep[:, None].astype(vals.dtype)
+    y = jnp.sum(vals.reshape(T, k, d) *
+                gate_vals[..., None].astype(vals.dtype), axis=1)
+
+    # load-balancing aux loss (Switch/GShard)
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32),
+                           axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = jnp.sum(frac_tokens * frac_probs) * e
+    return y.reshape(B, S, d), aux
+
+
+def block(cfg: LMConfig, p: Params, x, positions):
+    h = x + attention(cfg, p, rms_norm(x, p["ln1"]), positions)
+    if cfg.is_moe:
+        y, aux = moe_block(cfg, p, rms_norm(h, p["ln2"]))
+    else:
+        y, aux = swiglu(p, rms_norm(h, p["ln2"])), jnp.float32(0)
+    return h + y, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(cfg: LMConfig, params: Params, tokens) -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def layer_fn(carry, layer_params):
+        x, aux = carry
+        x, a = block(cfg, layer_params, x, positions)
+        return (x, aux + a), None
+
+    layer_fn_ = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+    (x, aux), _ = jax.lax.scan(layer_fn_, (x, jnp.float32(0)),
+                               params["layers"],
+                               unroll=cfg.n_layers if cfg.unroll else 1)
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux
+
+
+def lm_loss(cfg: LMConfig, params: Params, tokens, targets,
+            aux_weight: float = 0.01):
+    logits, aux = forward(cfg, params, tokens)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: LMConfig, max_len: int) -> int:
+    """Ring-buffer length: SWA models only ever need `window` entries."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    L = cache_len(cfg, max_len)
+    shape = (cfg.n_layers, batch, L, cfg.n_kv_heads, cfg.d_head)
+    cache = dict(pos=jnp.full((cfg.n_layers, batch, L), -1, jnp.int32))
+    if cfg.kv_quant_int8:
+        cache["k"] = jnp.zeros(shape, jnp.int8)
+        cache["v"] = jnp.zeros(shape, jnp.int8)
+        cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    else:
+        cache["k"] = jnp.zeros(shape, cfg.dtype)
+        cache["v"] = jnp.zeros(shape, cfg.dtype)
+    return cache
+
+
+def _quantize_kv(x):
+    """x [..., dh] -> (int8 values, per-vector f32 scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _cache_attention(cfg: LMConfig, q, k_cache, v_cache, pos_cache, pos,
+                     k_scale=None, v_scale=None):
+    """Attention of one query token against the (ring) cache.
+
+    q [B, Hkv, G, dh]; caches [B, T, Hkv, dh].  Two paths:
+      * dense: one einsum over the full cache;
+      * chunked (cfg.decode_chunk): lax.scan over cache chunks with an
+        online softmax — peak memory O(chunk) instead of O(T), and int8
+        chunks are dequantized per-chunk (the KV-quant + paging pattern;
+        needed for 32k/500k-token caches, see DESIGN.md).
+    """
+    B, T = k_cache.shape[0], k_cache.shape[1]
+    inv_sqrt = 1.0 / jnp.sqrt(jnp.array(cfg.d_head, jnp.float32))
+
+    def score_block(kc, vc, pc, ks, vs):
+        k = kc.astype(jnp.float32)
+        v = vc.astype(jnp.float32)
+        if ks is not None:
+            k = k * ks[..., None]
+            v = v * vs[..., None]
+        s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32), k) * inv_sqrt
+        valid = (pc >= 0) & (pc <= pos[:, None])
+        if cfg.sliding_window is not None:
+            valid &= (pos[:, None] - pc) < cfg.sliding_window
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        return s, v
+
+    if cfg.decode_chunk is None or cfg.decode_chunk >= T:
+        s, v = score_block(k_cache, v_cache, pos_cache, k_scale, v_scale)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+        return out.astype(cfg.dtype)
+
+    C = cfg.decode_chunk
+    assert T % C == 0, (T, C)
+    n_chunks = T // C
+    H, G, dh = q.shape[1], q.shape[2], q.shape[3]
+
+    def chunk(carry, idx):
+        m, l, acc = carry
+        ks = None if k_scale is None else \
+            jax.lax.dynamic_slice_in_dim(k_scale, idx * C, C, axis=1)
+        vs = None if v_scale is None else \
+            jax.lax.dynamic_slice_in_dim(v_scale, idx * C, C, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k_cache, idx * C, C, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v_cache, idx * C, C, axis=1)
+        pc = jax.lax.dynamic_slice_in_dim(pos_cache, idx * C, C, axis=1)
+        s, v = score_block(kc, vc, pc, ks, vs)               # [B,K,G,C]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # all-masked chunks keep m == -inf; guard the exp's against nan
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkgt,btkd->bkgd", p, v)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, G), jnp.float32)
+    a0 = jnp.zeros((B, H, G, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(chunk, (m0, l0, a0),
+                                  jnp.arange(n_chunks),
+                                  unroll=n_chunks if cfg.unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(cfg.dtype)
+
+
+def decode_step(cfg: LMConfig, params: Params, cache: Params, token,
+                pos) -> Tuple[jax.Array, Params]:
+    """One decoding step: token [B], pos [B] -> (logits [B, V], new cache).
+
+    The cache is a ring buffer of length cache_len (== window for SWA
+    models — this is what makes mixtral's 500k-token decode O(window));
+    absolute positions ride along for masking + RoPE correctness.
+    """
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)      # [B, 1, d]
+    slot = jnp.mod(pos, cache["k"].shape[2])                    # ring index
+    quant = cfg.kv_quant_int8
+
+    def layer_fn(carry, inputs):
+        x, li = carry
+        if quant:
+            (layer_params, k_cache, v_cache, pos_cache,
+             k_scale, v_scale) = inputs
+        else:
+            layer_params, k_cache, v_cache, pos_cache = inputs
+            k_scale = v_scale = None
+        h = rms_norm(x, layer_params["ln1"])
+        q, knew, vnew = _qkv(cfg, layer_params, h)
+        q = rope(q, pos[:, None], cfg)
+        knew = rope(knew, pos[:, None], cfg)
+        bidx = jnp.arange(B)
+        if quant:
+            kq, ks = _quantize_kv(knew[:, 0])
+            vq, vs = _quantize_kv(vnew[:, 0])
+            k_cache = k_cache.at[bidx, slot].set(kq)
+            v_cache = v_cache.at[bidx, slot].set(vq)
+            k_scale = k_scale.at[bidx, slot].set(ks)
+            v_scale = v_scale.at[bidx, slot].set(vs)
+        else:
+            k_cache = k_cache.at[bidx, slot].set(knew[:, 0])
+            v_cache = v_cache.at[bidx, slot].set(vnew[:, 0])
+        pos_cache = pos_cache.at[bidx, slot].set(pos)
+        g = cfg.n_heads // cfg.n_kv_heads
+        qh = q.reshape(B, cfg.n_kv_heads, g, cfg.d_head)
+        out = _cache_attention(cfg, qh, k_cache, v_cache, pos_cache, pos,
+                               k_scale, v_scale)
+        out = out.reshape(B, 1, cfg.n_heads * cfg.d_head) @ layer_params["wo"]
+        h2 = x + out
+        if cfg.is_moe:
+            y, _ = moe_block(cfg, layer_params, rms_norm(h2, layer_params["ln2"]))
+        else:
+            y = swiglu(layer_params, rms_norm(h2, layer_params["ln2"]))
+        outs = (k_cache, v_cache, pos_cache) + \
+            ((k_scale, v_scale) if quant else ())
+        return (h2 + y, li + 1), outs
+
+    ins = (params["layers"], cache["k"], cache["v"], cache["pos"]) + \
+        ((cache["k_scale"], cache["v_scale"]) if quant else ())
+    (x, _), outs = jax.lax.scan(layer_fn, (x, 0), ins,
+                                unroll=cfg.n_layers if cfg.unroll else 1)
+    new_cache = dict(k=outs[0], v=outs[1], pos=outs[2])
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = outs[3], outs[4]
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0, :]
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params: Params, tokens, max_len: int):
+    """Prefill: full forward + cache construction for subsequent decode."""
+    B, S = tokens.shape
+    L = cache_len(cfg, max_len)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def layer_fn(x, layer_params):
+        h = rms_norm(x, layer_params["ln1"])
+        q, k, v = _qkv(cfg, layer_params, h)
+        del q
+        # recompute attention via the shared block for the hidden states
+        x2, _ = block(cfg, layer_params, x, positions)
+        k = rope(k, positions, cfg)
+        # keep the last L positions in the ring buffer layout
+        keep = min(L, S)
+        slot = jnp.mod(positions[:, -keep:], L)
+        k_cache = jnp.zeros((B, L, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+        v_cache = jnp.zeros((B, L, cfg.n_kv_heads, cfg.d_head), cfg.dtype)
+        pos_cache = jnp.full((B, L), -1, jnp.int32)
+        bidx = jnp.arange(B)[:, None]
+        k_cache = k_cache.at[bidx, slot].set(k[:, -keep:])
+        v_cache = v_cache.at[bidx, slot].set(v[:, -keep:])
+        pos_cache = pos_cache.at[bidx, slot].set(positions[:, -keep:])
+        return x2, (k_cache, v_cache, pos_cache)
+
+    x, (kc, vc, pc) = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, dict(k=kc, v=vc, pos=pc)

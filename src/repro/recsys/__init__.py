@@ -1,0 +1,3 @@
+from .embedding import embedding_bag, embedding_lookup, onehot_lookup
+
+__all__ = ["embedding_bag", "embedding_lookup", "onehot_lookup"]

@@ -1,0 +1,4 @@
+from .trainer import Trainer, TrainerConfig, reshard
+from . import compression
+
+__all__ = ["Trainer", "TrainerConfig", "reshard", "compression"]

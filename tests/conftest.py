@@ -1,0 +1,8 @@
+"""Test config. NOTE: do NOT set XLA_FLAGS / fake device counts here —
+smoke tests must see the single real CPU device.  Multi-device tests
+spawn subprocesses that set XLA_FLAGS before importing jax."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))

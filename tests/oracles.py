@@ -1,0 +1,62 @@
+"""Host oracles used by the test-suite (networkx + pure python)."""
+from __future__ import annotations
+
+from collections import deque
+
+import networkx as nx
+
+from repro.core.automaton import L_S, L_T, L_WILD
+
+
+def nx_digraph(g):
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    return G
+
+
+def oracle_reach(g, s, t) -> bool:
+    return nx.has_path(nx_digraph(g), s, t)
+
+
+def oracle_dist(g, s, t):
+    try:
+        return nx.shortest_path_length(nx_digraph(g), s, t)
+    except nx.NetworkXNoPath:
+        return None
+
+
+def oracle_rpq(g, s, t, qa) -> bool:
+    """Product-automaton BFS over (node, state)."""
+    if s == t:
+        return bool(qa.nullable)
+    adj = [[] for _ in range(g.n)]
+    for u, v in zip(g.src.tolist(), g.dst.tolist()):
+        adj[u].append(v)
+
+    def match(v, q):
+        lq = qa.state_labels[q]
+        if lq >= 0:
+            return g.labels[v] == lq
+        if lq == L_WILD:
+            return True
+        if lq == L_S:
+            return v == s
+        if lq == L_T:
+            return v == t
+        return False
+
+    start = (s, 0)
+    seen = {start}
+    dq = deque([start])
+    while dq:
+        v, q = dq.popleft()
+        for v2 in adj[v]:
+            for q2 in range(qa.n_states):
+                if qa.trans[q, q2] and match(v2, q2):
+                    if v2 == t and q2 == qa.final:
+                        return True
+                    if (v2, q2) not in seen:
+                        seen.add((v2, q2))
+                        dq.append((v2, q2))
+    return False

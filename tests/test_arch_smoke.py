@@ -1,0 +1,72 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned arch and run one actual step on CPU, asserting finite outputs.
+(The FULL configs are exercised only via the dry-run, which lowers
+ShapeDtypeStructs without allocation.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, all_cells, get_arch
+from repro.configs.families.base import zeros_from_abstract
+
+
+def test_registry_has_all_ten():
+    expected = {"olmoe-1b-7b", "mixtral-8x7b", "qwen1.5-32b", "qwen2-1.5b",
+                "chatglm3-6b", "egnn", "mace", "nequip", "gat-cora",
+                "bert4rec"}
+    assert set(ARCHS) == expected
+    assert len(all_cells()) == 40
+
+
+SMOKE_CELLS = [(aid, sid) for aid, arch in ARCHS.items()
+               for sid in arch.shape_ids()
+               if arch.skip_reason(sid) is None]
+
+
+@pytest.mark.parametrize("aid,sid", SMOKE_CELLS,
+                         ids=[f"{a}::{s}" for a, s in SMOKE_CELLS])
+def test_smoke_cell(aid, sid):
+    arch = get_arch(aid)
+    prog = arch.build(sid, multipod=False, reduced=True)
+    args = zeros_from_abstract(prog.abstract_args, seed=hash(aid) % 1000)
+    out = jax.jit(prog.step_fn)(*args)
+    leaves = jax.tree.leaves(out)
+    assert leaves, "step produced no outputs"
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            assert np.isfinite(arr).all(), (aid, sid, arr.dtype)
+
+
+def test_skips_are_only_long_context_full_attention():
+    skips = [(a, s, ARCHS[a].skip_reason(s)) for a, s in all_cells()
+             if ARCHS[a].skip_reason(s)]
+    assert sorted(a for a, s, _ in skips) == sorted(
+        ["olmoe-1b-7b", "qwen1.5-32b", "qwen2-1.5b", "chatglm3-6b"])
+    assert all(s == "long_500k" for _, s, _ in skips)
+
+
+def test_full_configs_match_assignment():
+    """Spot-check exact assigned hyperparameters."""
+    q32 = get_arch("qwen1.5-32b").base_cfg
+    assert (q32.n_layers, q32.d_model, q32.n_heads, q32.d_ff,
+            q32.vocab) == (64, 5120, 40, 27392, 152064)
+    assert q32.qkv_bias
+    mix = get_arch("mixtral-8x7b").base_cfg
+    assert (mix.n_layers, mix.d_model, mix.n_experts, mix.top_k,
+            mix.d_ff_expert, mix.sliding_window) == (32, 4096, 8, 2, 14336,
+                                                     4096)
+    olm = get_arch("olmoe-1b-7b").base_cfg
+    assert (olm.n_experts, olm.top_k, olm.d_ff_expert,
+            olm.vocab) == (64, 8, 1024, 50304)
+    q2 = get_arch("qwen2-1.5b").base_cfg
+    assert (q2.n_layers, q2.d_model, q2.n_heads, q2.n_kv_heads,
+            q2.d_ff, q2.vocab) == (28, 1536, 12, 2, 8960, 151936)
+    glm = get_arch("chatglm3-6b").base_cfg
+    assert (glm.n_layers, glm.d_model, glm.n_heads, glm.n_kv_heads,
+            glm.d_ff, glm.vocab) == (28, 4096, 32, 2, 13696, 65024)
+    assert glm.rope_pct == 0.5
+    b4r = get_arch("bert4rec").full_cfg
+    assert (b4r.embed_dim, b4r.n_blocks, b4r.n_heads,
+            b4r.seq_len) == (64, 2, 2, 200)

@@ -1,0 +1,121 @@
+"""disReach / disDist correctness vs oracles, incl. hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dis_dist, dis_reach, fragment_graph
+from repro.graph import (bfs_partition, block_partition, erdos_renyi,
+                         preferential_attachment, random_partition)
+
+from oracles import oracle_dist, oracle_reach
+
+
+def _case(n, m, k, seed, partitioner=random_partition):
+    g = erdos_renyi(n, m, n_labels=4, seed=seed)
+    part = partitioner(g, k, seed) if partitioner is random_partition \
+        else partitioner(g, k)
+    return g, fragment_graph(g, part, k)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_reach_matches_oracle(seed, k):
+    rng = np.random.default_rng(seed)
+    g, fr = _case(int(rng.integers(8, 40)), int(rng.integers(10, 120)), k, seed)
+    for _ in range(8):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        assert dis_reach(fr, s, t).answer == oracle_reach(g, s, t)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("k", [1, 3])
+def test_dist_matches_oracle(seed, k):
+    rng = np.random.default_rng(seed + 40)
+    g, fr = _case(int(rng.integers(8, 40)), int(rng.integers(10, 120)), k, seed)
+    for _ in range(6):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        assert dis_dist(fr, s, t).distance == oracle_dist(g, s, t)
+
+
+def test_bounded_reach_semantics():
+    # path 0->1->2->3 plus shortcut 0->3
+    from repro.graph.graph import Graph
+    g = Graph(5, np.array([0, 1, 2, 0]), np.array([1, 2, 3, 3]),
+              np.zeros(5, np.int32))
+    part = np.array([0, 1, 0, 1, 0], dtype=np.int32)
+    fr = fragment_graph(g, part, 2)
+    assert dis_dist(fr, 0, 3).distance == 1
+    assert dis_dist(fr, 0, 3, bound=1).answer
+    assert dis_dist(fr, 1, 3, bound=1).answer is False   # dist 2 > 1
+    assert dis_dist(fr, 1, 3, bound=2).answer
+    assert dis_dist(fr, 3, 0, bound=10).answer is False  # unreachable
+    assert dis_dist(fr, 4, 4, bound=0).answer            # trivial
+
+
+@pytest.mark.parametrize("partitioner", [block_partition, bfs_partition])
+def test_partitioner_independence(partitioner):
+    """Guarantee: answers hold no matter how G is fragmented."""
+    g = preferential_attachment(60, 3, seed=7)
+    fr = fragment_graph(g, partitioner(g, 4) if partitioner is block_partition
+                        else partitioner(g, 4, 0), 4)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        assert dis_reach(fr, s, t).answer == oracle_reach(g, s, t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_reach_any_fragmentation(data):
+    """Hypothesis: random graph x random fragmentation x random query —
+    disReach == oracle, and the traffic stays within the paper's bound."""
+    n = data.draw(st.integers(4, 24), label="n")
+    m = data.draw(st.integers(0, 60), label="m")
+    k = data.draw(st.integers(1, 5), label="k")
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    part = np.asarray(
+        data.draw(st.lists(st.integers(0, k - 1), min_size=n, max_size=n),
+                  label="part"), dtype=np.int32)
+    fr = fragment_graph(g, part, k)
+    s = data.draw(st.integers(0, n - 1), label="s")
+    t = data.draw(st.integers(0, n - 1), label="t")
+    res = dis_reach(fr, s, t)
+    assert res.answer == oracle_reach(g, s, t)
+    # Theorem 1(c): payload bits O(|V_f|^2); B = |V_f|+2
+    assert res.stats.payload_bits <= fr.B ** 2
+    assert res.stats.collective_rounds <= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_property_dist_matches_bfs(data):
+    n = data.draw(st.integers(4, 20))
+    m = data.draw(st.integers(0, 50))
+    k = data.draw(st.integers(1, 4))
+    seed = data.draw(st.integers(0, 10_000))
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    fr = fragment_graph(g, random_partition(g, k, seed), k)
+    s = data.draw(st.integers(0, n - 1))
+    t = data.draw(st.integers(0, n - 1))
+    assert dis_dist(fr, s, t).distance == oracle_dist(g, s, t)
+
+
+def test_single_fragment_degenerate():
+    g = erdos_renyi(30, 80, seed=3)
+    fr = fragment_graph(g, np.zeros(30, np.int32), 1)
+    assert fr.B == 2  # only the s/t slots
+    rng = np.random.default_rng(1)
+    for _ in range(6):
+        s, t = int(rng.integers(30)), int(rng.integers(30))
+        assert dis_reach(fr, s, t).answer == oracle_reach(g, s, t)
+
+
+def test_empty_graph_and_isolated_nodes():
+    from repro.graph.graph import Graph
+    g = Graph(4, np.array([], np.int64), np.array([], np.int64),
+              np.zeros(4, np.int32))
+    fr = fragment_graph(g, np.array([0, 1, 0, 1], np.int32), 2)
+    assert dis_reach(fr, 0, 1).answer is False
+    assert dis_reach(fr, 2, 2).answer is True
+    assert dis_dist(fr, 0, 3).distance is None

