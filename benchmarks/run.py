@@ -1,7 +1,9 @@
 """Benchmark entry point: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (plus section headers)."""
+Prints ``name,us_per_call,derived`` CSV rows (plus section headers) and
+emits BENCH_pr2.json with the amortized-cache before/after numbers."""
 from __future__ import annotations
 
+import json
 import sys
 
 from . import paper_experiments as pe
@@ -39,6 +41,20 @@ def main() -> None:
     print("# paper Exp-4: MapReduce")
     _emit("exp4", pe.exp4_mapreduce(n=int(800 * scale) + 100,
                                     m=int(3200 * scale) + 400))
+
+    print("# ISSUE-2: amortized rvset cache + batched queries (Table-2 cfg)")
+    amort = pe.exp_amortized(n=int(3000 * scale) + 100,
+                             m=int(12000 * scale) + 400,
+                             n_q=16 if fast else 64)
+    print(f"amortized/cold,{amort['cold_single_query_us']:.1f},")
+    print(f"amortized/warm_batched,{amort['warm_batched_per_query_us']:.1f},"
+          f"speedup={amort['speedup']:.1f};"
+          f"payload_shrink={amort['payload_shrink_factor']:.2f}")
+    out = "BENCH_pr2.json"
+    with open(out, "w") as f:
+        json.dump({"experiment": "amortized_rvset_cache",
+                   "fast_mode": fast, **amort}, f, indent=2)
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,23 @@
 """The paper's primary contribution: distributed (bounded / regular)
-reachability queries via partial evaluation, with performance guarantees."""
-from .api import QueryResult, dis_dist, dis_reach, dis_rpq, dis_rpq_regex
+reachability queries via partial evaluation, with performance guarantees.
+
+Beyond the paper (DESIGN.md Sec. 3): an amortized rvset cache splits
+localEval into a once-per-Fragmentation closure phase and a cheap per-query
+phase, with batched multi-query entry points for serving workloads.
+"""
+from .api import (QueryResult, dis_dist, dis_dist_batch, dis_dist_cached,
+                  dis_reach, dis_reach_batch, dis_reach_cached, dis_rpq,
+                  dis_rpq_cached, dis_rpq_regex)
 from .automaton import QueryAutomaton, accepts, build_query_automaton
+from .cache import RvsetCache, get_rvset_cache, prepare_rvset_cache
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, fragment_graph, query_slots
 
 __all__ = [
     "QueryResult", "dis_dist", "dis_reach", "dis_rpq", "dis_rpq_regex",
+    "dis_reach_batch", "dis_dist_batch",
+    "dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
+    "RvsetCache", "prepare_rvset_cache", "get_rvset_cache",
     "QueryAutomaton", "accepts", "build_query_automaton",
     "INF", "QueryStats", "Fragmentation", "fragment_graph", "query_slots",
 ]

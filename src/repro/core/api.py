@@ -20,8 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.graph import Graph
+from . import cache as _cache
 from . import engine
 from .automaton import QueryAutomaton, build_query_automaton
+from .cache import dis_dist_batch, dis_reach_batch
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, fragment_graph, query_slots
 
@@ -72,8 +74,8 @@ def dis_reach(fr: Fragmentation, s: int, t: int,
                   jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
     D = jnp.any(rlocs, axis=0)                 # assemble (the one collective)
     ans = engine.evaldg_reach(D, _src_rows(fr), _tgt_cols(fr, t))
-    stats = QueryStats(payload_bits=fr.B * fr.B, collective_rounds=1,
-                       boundary=fr.B, states=1)
+    stats = QueryStats(payload_bits=fr.packed_traffic_bits(),
+                       collective_rounds=1, boundary=fr.B, states=1)
     return QueryResult(bool(ans), None, stats,
                        np.asarray(D) if return_matrix else None)
 
@@ -105,7 +107,10 @@ def dis_dist(fr: Fragmentation, s: int, t: int,
     answer = reachable if bound is None else (reachable and d <= bound)
     stats = QueryStats(payload_bits=fr.B * fr.B * 32, collective_rounds=1,
                        boundary=fr.B, states=1)
-    return QueryResult(answer, d if reachable else None, stats)
+    # a failed bounded query reports no distance: with the propagation
+    # capped at the bound, d is not the true distance past it (local
+    # segments longer than the cap were pruned), so don't surface it
+    return QueryResult(answer, d if (reachable and answer) else None, stats)
 
 
 # ---------------------------------------------------------------------------
@@ -142,8 +147,8 @@ def dis_rpq(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton,
     if bt >= 0:
         tgt_cols[bt * Q + qa.final] = True
     ans = engine.evaldg_reach(D, jnp.asarray(src_rows), jnp.asarray(tgt_cols))
-    stats = QueryStats(payload_bits=(fr.B * Q) ** 2, collective_rounds=1,
-                       boundary=fr.B, states=Q)
+    stats = QueryStats(payload_bits=fr.packed_traffic_bits(states=Q),
+                       collective_rounds=1, boundary=fr.B, states=Q)
     return QueryResult(bool(ans), None, stats,
                        np.asarray(D) if return_matrix else None)
 
@@ -156,3 +161,47 @@ def dis_rpq_regex(fr: Fragmentation, s: int, t: int, regex: str,
     else:
         qa = build_query_automaton(regex, lambda name: int(name))
     return dis_rpq(fr, s, t, qa, **kw)
+
+
+# ---------------------------------------------------------------------------
+# amortized-cache paths (core.cache): same answers, repeated queries cheap
+# ---------------------------------------------------------------------------
+
+def dis_reach_cached(fr: Fragmentation, s: int, t: int) -> QueryResult:
+    """disReach against the rvset cache (built on first use).  The warm
+    per-query cost is one single-source propagation + one or-and
+    vector-matrix product instead of a full localEval."""
+    if s == t:
+        return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
+    ans = _cache.reach_cached(fr, s, t)
+    stats = QueryStats(payload_bits=fr.packed_traffic_bits(),
+                       collective_rounds=1, boundary=fr.B, states=1)
+    return QueryResult(bool(ans), None, stats)
+
+
+def dis_dist_cached(fr: Fragmentation, s: int, t: int,
+                    bound: Optional[int] = None) -> QueryResult:
+    if s == t:
+        ok = bound is None or 0 <= bound
+        return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
+    d = _cache.dist_cached(fr, s, t)
+    reachable = d is not None
+    answer = reachable if bound is None else (reachable and d <= bound)
+    # match the seed path: a bounded query that fails reports no distance
+    # (dis_dist caps propagation at the bound, so it never sees the value)
+    if bound is not None and not answer:
+        d = None
+    stats = QueryStats(payload_bits=fr.B * fr.B * 32, collective_rounds=1,
+                       boundary=fr.B, states=1)
+    return QueryResult(answer, d, stats)
+
+
+def dis_rpq_cached(fr: Fragmentation, s: int, t: int,
+                   qa: QueryAutomaton) -> QueryResult:
+    if s == t:
+        return QueryResult(bool(qa.nullable), 0,
+                           QueryStats(0, 0, fr.B, qa.n_states))
+    ans = _cache.rpq_cached(fr, s, t, qa)
+    stats = QueryStats(payload_bits=fr.packed_traffic_bits(states=qa.n_states),
+                       collective_rounds=1, boundary=fr.B, states=qa.n_states)
+    return QueryResult(bool(ans), None, stats)

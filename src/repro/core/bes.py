@@ -23,53 +23,75 @@ def _ceil_log2(b: int) -> int:
     return max(1, math.ceil(math.log2(max(b, 2))))
 
 
-def bool_closure(D, use_pallas: bool = False):
+def bool_closure(D, use_pallas="auto"):
     """Reflexive-transitive closure of a Boolean matrix [B, B].
 
     A := A | A@A, repeated ceil(log2 B) times over A = D | I.
+    ``use_pallas``: True forces the Pallas kernel (interpret mode off-TPU,
+    for tests), False forces the XLA fallback, "auto" dispatches on backend
+    (MXU kernel on TPU, f32 matmul elsewhere).
     """
     B = D.shape[-1]
-    if use_pallas:
+    if use_pallas == "auto":
+        from ..kernels.bool_matmul import ops as bops
+        matmul = bops.or_and_matmul
+    elif use_pallas:
         from ..kernels.bool_matmul import ops as bops
         matmul = bops.bool_matmul
     else:
         matmul = lambda a, b: (a.astype(jnp.float32) @ b.astype(jnp.float32)) > 0
     A = D | jnp.eye(B, dtype=bool)
+    if B == 0:
+        return A
 
-    def body(_, A):
-        return A | matmul(A, A)
+    # squaring doubles covered path length: fixpoint after ceil(log2 diam)
+    # rounds, capped at ceil(log2 B) (worst case diam == B)
+    def cond(state):
+        _, i, changed = state
+        return changed & (i < _ceil_log2(B))
 
-    return jax.lax.fori_loop(0, _ceil_log2(B), body, A)
+    def body(state):
+        A, i, _ = state
+        A2 = A | matmul(A, A)
+        return A2, i + 1, jnp.any(A2 != A)
+
+    A, _, _ = jax.lax.while_loop(cond, body, (A, jnp.int32(0), jnp.bool_(True)))
+    return A
 
 
-def tropical_closure(W, use_pallas: bool = False, row_chunk: int = 64):
+def tropical_closure(W, use_pallas="auto", row_chunk: int = 16):
     """Min-plus closure of a distance matrix [B, B] (diag forced to 0).
 
     W := min(W, W (min,+) W), repeated ceil(log2 B) times.
-    The pure-jnp path chunks rows to avoid a B^3 intermediate.
+    The pure-jnp path chunks rows (``row_chunk`` of them at a time) so the
+    broadcast intermediate stays at row_chunk * B^2 int32, not B^3.
+    ``use_pallas`` semantics as in :func:`bool_closure`.
     """
     B = W.shape[-1]
     W = jnp.where(jnp.eye(B, dtype=bool), 0, W).astype(jnp.int32)
 
-    if use_pallas:
-        from ..kernels.tropical_matmul import ops as tops
+    from ..kernels.tropical_matmul import ops as tops
+    if use_pallas == "auto":
+        mp = lambda a, b: tops.min_plus_matmul(a, b, row_chunk=row_chunk)
+    elif use_pallas:
         mp = tops.tropical_matmul
     else:
-        def mp(a, b):
-            def one_chunk(rows):
-                # rows [C, B] (min,+) b [B, B] -> [C, B]
-                return jnp.min(rows[:, :, None] + b[None, :, :], axis=1)
-            n_chunks = max(1, B // row_chunk)
-            if B % row_chunk == 0 and n_chunks > 1:
-                chunks = a.reshape(n_chunks, row_chunk, B)
-                out = jax.lax.map(one_chunk, chunks)
-                return out.reshape(B, B)
-            return one_chunk(a)
+        mp = lambda a, b: tops.min_plus_chunked(a, b, row_chunk=row_chunk)
 
-    def body(_, W):
-        return jnp.minimum(jnp.minimum(W, mp(W, W)), INF)
+    if B == 0:
+        return W
 
-    return jax.lax.fori_loop(0, _ceil_log2(B), body, W)
+    def cond(state):
+        _, i, changed = state
+        return changed & (i < _ceil_log2(B))
+
+    def body(state):
+        W, i, _ = state
+        W2 = jnp.minimum(jnp.minimum(W, mp(W, W)), INF)
+        return W2, i + 1, jnp.any(W2 != W)
+
+    W, _, _ = jax.lax.while_loop(cond, body, (W, jnp.int32(0), jnp.bool_(True)))
+    return W
 
 
 def closure_answers(A, src_rows, tgt_cols):

@@ -1,0 +1,340 @@
+"""Amortized rvset cache + batched multi-query engine (DESIGN.md Sec. 3).
+
+The paper's guarantees are per-query, but a serving engine answers many
+queries against the *same* fragmentation.  ``localEval`` splits cleanly:
+
+* **query-independent phase** (expensive, once per Fragmentation):
+  every fragment's all-sources local fixpoint — from each owned in-node to
+  every local slot — assembled into the boundary-to-boundary dependency
+  matrix ``D0 [|V_f|, |V_f|]`` and closed by repeated squaring
+  (``bes.bool_closure`` / ``tropical_closure``: ceil(log2 |V_f|) semiring
+  matmuls, the Pallas MXU kernels on TPU) instead of diam(G_f) relaxations
+  per query;
+* **per-query phase** (cheap): one single-source propagation from ``s`` in
+  its own fragment, a pure gather of the ``t``-column out of the cached
+  frontiers, and one or-and vector-matrix product through the closure.
+
+Correctness identity (checked property-style in tests/test_batched_cache.py):
+
+    reach(s, t) = direct(s, t)                                  # local path
+                | OR_{u,v in V_f}  sb[u] & C[u, v] & tc[v]
+
+where ``sb[u]`` = s locally reaches the stub of boundary node u, ``C`` is
+the reflexive-transitive closure of D0, and ``tc[v]`` = in-node v locally
+reaches t (gathered from the cached frontier of v's fragment — virtual-stub
+slots included, so cross-edge arrivals at a boundary t need no special
+aliasing).  The tropical and product-automaton variants replace (OR, AND)
+with (min, +) and the state-expanded matrix respectively.
+
+Batched: ``dis_reach_batch(fr, pairs)`` answers N pairs in ONE jitted call —
+N vmapped single-source propagations + one [N, |V_f|] x [|V_f|, |V_f|]
+or-and matmul against the cached closure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bes, engine
+from .automaton import QueryAutomaton
+from .engine import INF
+from .fragments import Fragmentation
+
+NO_NODE = np.int32(-(2 ** 30))     # gid that matches no L_S / L_T state
+
+
+# ---------------------------------------------------------------------------
+# cache container + construction
+# ---------------------------------------------------------------------------
+
+MAX_RPQ_CLOSURES = 32      # FIFO-evicted: each is an [(nb*Q), (nb*Q)] matrix
+
+
+@dataclasses.dataclass
+class RvsetCache:
+    """Query-independent closures + frontiers for one Fragmentation."""
+
+    fr: Fragmentation
+    arrays: Dict[str, jax.Array]      # fr.arrays uploaded once to device
+    bl_frontier: jax.Array            # [nb, n_max+1] bool, in-node -> slot
+    closure: jax.Array                # [nb, nb] bool, reflexive-transitive
+    part_b: np.ndarray                # [nb] owning fragment of boundary node
+    bl_dist: Optional[jax.Array] = None       # [nb, n_max+1] int32
+    dist_closure: Optional[jax.Array] = None  # [nb, nb] int32, diag 0
+    rpq_closures: Dict[Tuple, jax.Array] = dataclasses.field(
+        default_factory=dict)         # automaton key -> [(nb*Q), (nb*Q)]
+
+    @property
+    def nb(self) -> int:
+        return self.fr.n_boundary
+
+
+def _boundary_rows(fr: Fragmentation, frontiers, fill, combine):
+    """Scatter stacked per-fragment source rows [k, S, n+1] into one
+    [nb, n+1] matrix indexed by boundary position (each in-node is owned by
+    exactly one fragment, so rows never collide)."""
+    B = fr.B
+    src_row = fr.arrays["src_row"]                  # [k, S]; pad rows == B
+    flat_rows = jnp.asarray(src_row.reshape(-1))
+    flat = frontiers.reshape(-1, frontiers.shape[-1])
+    out = jnp.full((B + 1, frontiers.shape[-1]), fill, frontiers.dtype)
+    out = combine(out.at[flat_rows], flat)
+    return out[: fr.n_boundary]
+
+
+def prepare_rvset_cache(fr: Fragmentation, with_dist: bool = False,
+                        use_pallas="auto") -> RvsetCache:
+    """Build (or extend) the amortized cache and attach it to ``fr``."""
+    cache = fr.rvset_cache
+    if cache is None:
+        arrs = {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+        front = jax.vmap(functools.partial(
+            engine.local_frontier_reach, n_max=fr.n_max))(
+            arrs["esrc"], arrs["edst"], arrs["src_local"])   # [k, S, n+1]
+        bl = _boundary_rows(fr, front, False, lambda ref, v: ref.max(v))
+        D0 = _gather_boundary_matrix(fr, bl, fill=False)
+        C = bes.bool_closure(D0, use_pallas=use_pallas)
+        cache = RvsetCache(fr=fr, arrays=arrs, bl_frontier=bl, closure=C,
+                           part_b=fr.part[fr.bnodes].astype(np.int32))
+        fr.rvset_cache = cache
+    if with_dist and cache.bl_dist is None:
+        arrs = cache.arrays
+        front = jax.vmap(functools.partial(
+            engine.local_frontier_dist, n_max=fr.n_max))(
+            arrs["esrc"], arrs["edst"], arrs["src_local"])
+        bl_d = _boundary_rows(fr, front, jnp.int32(INF),
+                              lambda ref, v: ref.min(v))
+        W0 = _gather_boundary_matrix(fr, bl_d, fill=INF)
+        cache.bl_dist = bl_d
+        cache.dist_closure = bes.tropical_closure(W0, use_pallas=use_pallas)
+    return cache
+
+
+def _gather_boundary_matrix(fr: Fragmentation, bl, fill):
+    """D0[u, w] = cached frontier of in-node u read at the stub slot of
+    boundary node w inside u's fragment (pad slot column carries ``fill``)."""
+    nb = fr.n_boundary
+    if nb == 0:
+        return jnp.zeros((0, 0), bl.dtype)
+    part_b = fr.part[fr.bnodes]
+    cols = fr.arrays["tgt_local"][part_b][:, :nb]          # [nb, nb]
+    return jnp.take_along_axis(bl, jnp.asarray(cols), axis=1)
+
+
+def get_rvset_cache(fr: Fragmentation, with_dist: bool = False) -> RvsetCache:
+    cache = fr.rvset_cache
+    if cache is None or (with_dist and cache.bl_dist is None):
+        cache = prepare_rvset_cache(fr, with_dist=with_dist)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# batched per-query phase (one jitted call for N pairs)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def _batch_reach_kernel(esrc, edst, tgt_local, bl, C, frag_s, s_slot,
+                        t_slot_sfrag, t_cols, *, n_max: int):
+    """N pairs -> N answers.  Shapes: esrc/edst [k, E]; tgt_local [k, B];
+    bl [nb, n+1]; C [nb, nb]; frag_s/s_slot/t_slot_sfrag [N];
+    t_cols [N, nb] (slot of t_j inside the fragment owning boundary u)."""
+    nb = C.shape[0]
+    es = jnp.take(esrc, frag_s, axis=0)                    # [N, E]
+    ed = jnp.take(edst, frag_s, axis=0)
+    f = jax.vmap(functools.partial(engine.single_source_reach,
+                                   n_max=n_max))(es, ed, s_slot)  # [N, n+1]
+    direct = jnp.take_along_axis(f, t_slot_sfrag[:, None], axis=1)[:, 0]
+    tgt_s = jnp.take(tgt_local, frag_s, axis=0)[:, :nb]    # [N, nb]
+    sb = jnp.take_along_axis(f, tgt_s, axis=1)             # [N, nb]
+    tc = jax.vmap(lambda c: bl[jnp.arange(nb), c])(t_cols)  # [N, nb]
+    from ..kernels.bool_matmul.ops import or_and_matmul
+    sbc = or_and_matmul(sb, C) if nb else sb               # [N, nb]
+    return direct | jnp.any(sbc & tc, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def _batch_dist_kernel(esrc, edst, tgt_local, bl_d, Cd, frag_s, s_slot,
+                       t_slot_sfrag, t_cols, *, n_max: int):
+    """Tropical twin of :func:`_batch_reach_kernel`: N distances (INF if
+    unreachable)."""
+    nb = Cd.shape[0]
+    es = jnp.take(esrc, frag_s, axis=0)
+    ed = jnp.take(edst, frag_s, axis=0)
+    f = jax.vmap(functools.partial(engine.single_source_dist,
+                                   n_max=n_max))(es, ed, s_slot)  # [N, n+1]
+    direct = jnp.take_along_axis(f, t_slot_sfrag[:, None], axis=1)[:, 0]
+    tgt_s = jnp.take(tgt_local, frag_s, axis=0)[:, :nb]
+    sb = jnp.take_along_axis(f, tgt_s, axis=1)             # [N, nb]
+    tc = jax.vmap(lambda c: bl_d[jnp.arange(nb), c])(t_cols)
+    from ..kernels.tropical_matmul.ops import min_plus_matmul
+    if nb:
+        sbc = min_plus_matmul(sb, Cd)                      # [N, nb]
+        via = jnp.min(jnp.minimum(sbc + tc, INF), axis=1)
+    else:
+        via = jnp.full(direct.shape, INF, jnp.int32)
+    return jnp.minimum(jnp.minimum(direct, via), INF)
+
+
+def _batch_inputs(fr: Fragmentation, cache: RvsetCache,
+                  pairs: np.ndarray):
+    """Host-side per-batch index arrays (pure numpy gathers)."""
+    ss, tt = pairs[:, 0], pairs[:, 1]
+    slot_of = fr.slot_index()                              # [n, k]
+    frag_s = fr.part[ss].astype(np.int32)
+    s_slot = fr.owner_local[ss].astype(np.int32)
+    t_slot_sfrag = slot_of[tt, frag_s]                     # [N]
+    # slot of t_j inside the fragment owning each boundary node u
+    t_cols = slot_of[tt][:, cache.part_b]                  # [N, nb]
+    return (jnp.asarray(frag_s), jnp.asarray(s_slot),
+            jnp.asarray(t_slot_sfrag), jnp.asarray(t_cols))
+
+
+def _as_pairs(pairs) -> np.ndarray:
+    p = np.asarray(pairs, dtype=np.int64)
+    if p.ndim != 2 or p.shape[1] != 2:
+        raise ValueError(f"pairs must be [N, 2], got {p.shape}")
+    return p
+
+
+def dis_reach_batch(fr: Fragmentation, pairs) -> np.ndarray:
+    """Answer N (s, t) reachability queries in one jitted call against the
+    amortized rvset cache.  Returns [N] bool."""
+    pairs = _as_pairs(pairs)
+    if len(pairs) == 0:
+        return np.zeros(0, dtype=bool)
+    cache = get_rvset_cache(fr)
+    arrs = cache.arrays
+    out = _batch_reach_kernel(
+        arrs["esrc"], arrs["edst"], arrs["tgt_local"],
+        cache.bl_frontier, cache.closure,
+        *_batch_inputs(fr, cache, pairs), n_max=fr.n_max)
+    return np.asarray(out)
+
+
+def dis_dist_batch(fr: Fragmentation, pairs,
+                   bound: Optional[int] = None) -> np.ndarray:
+    """N shortest distances (or bounded-reachability answers when ``bound``
+    is given: dist <= bound).  Returns [N] int64 distances with -1 for
+    unreachable, or [N] bool when ``bound`` is not None."""
+    pairs = _as_pairs(pairs)
+    if len(pairs) == 0:
+        return np.zeros(0, dtype=bool if bound is not None else np.int64)
+    cache = get_rvset_cache(fr, with_dist=True)
+    arrs = cache.arrays
+    d = np.asarray(_batch_dist_kernel(
+        arrs["esrc"], arrs["edst"], arrs["tgt_local"],
+        cache.bl_dist, cache.dist_closure,
+        *_batch_inputs(fr, cache, pairs), n_max=fr.n_max)).astype(np.int64)
+    if bound is not None:
+        return d <= bound
+    d[d >= int(INF)] = -1
+    return d
+
+
+# ---------------------------------------------------------------------------
+# cached single-query wrappers (batch of one)
+# ---------------------------------------------------------------------------
+
+def reach_cached(fr: Fragmentation, s: int, t: int) -> bool:
+    return bool(dis_reach_batch(fr, [(s, t)])[0])
+
+
+def dist_cached(fr: Fragmentation, s: int, t: int) -> Optional[int]:
+    d = int(dis_dist_batch(fr, [(s, t)])[0])
+    return None if d < 0 else d
+
+
+# ---------------------------------------------------------------------------
+# regular (RPQ) cached path
+# ---------------------------------------------------------------------------
+
+def _qa_key(qa: QueryAutomaton) -> Tuple:
+    return (qa.n_states, qa.start, qa.state_labels.tobytes(),
+            qa.trans.tobytes())
+
+
+def product_closure(fr: Fragmentation, qa: QueryAutomaton,
+                    use_pallas="auto") -> jax.Array:
+    """Query-independent product-automaton closure [(nb*Q), (nb*Q)].
+
+    Sound because the Glushkov automaton's u_s has no incoming and u_t no
+    outgoing transitions: neither s-only nor t-only states can occur strictly
+    inside a boundary-to-boundary path, so matching them off (NO_NODE gid)
+    loses nothing the per-query phase doesn't re-add.
+    """
+    cache = get_rvset_cache(fr)
+    key = _qa_key(qa)
+    if key in cache.rpq_closures:
+        return cache.rpq_closures[key]
+    arrs = cache.arrays
+    q_labels = jnp.asarray(qa.state_labels)
+    q_trans = jnp.asarray(qa.trans)
+    k, n_max, B, Q = fr.k, fr.n_max, fr.B, qa.n_states
+    no_slot = jnp.full(k, n_max, jnp.int32)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, lab, gid, sloc, tloc:
+        engine.local_eval_regular(es, ed, sl, sr, tl, lab, gid,
+                                  q_labels, q_trans, sloc, tloc,
+                                  jnp.int32(NO_NODE), jnp.int32(NO_NODE),
+                                  n_max=n_max, B=B))
+    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"], arrs["labels"],
+                  arrs["gids"], no_slot, no_slot)
+    D = jnp.any(rlocs, axis=0)                              # [(B*Q), (B*Q)]
+    nb = fr.n_boundary
+    D = D.reshape(B, Q, B, Q)[:nb, :, :nb, :].reshape(nb * Q, nb * Q)
+    C = bes.bool_closure(D, use_pallas=use_pallas)
+    # bound the per-automaton cache: each closure is (nb*Q)^2 bools, and a
+    # server facing user-supplied regexes must not grow without limit
+    while len(cache.rpq_closures) >= MAX_RPQ_CLOSURES:
+        cache.rpq_closures.pop(next(iter(cache.rpq_closures)))
+    cache.rpq_closures[key] = C
+    return C
+
+
+def rpq_cached(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton) -> bool:
+    """Cached disRPQ: per-automaton product closure (amortized) + one
+    forward and k reverse product propagations per query."""
+    if s == t:
+        return bool(qa.nullable)
+    C = product_closure(fr, qa)
+    cache = get_rvset_cache(fr)
+    arrs = cache.arrays
+    q_labels = jnp.asarray(qa.state_labels)
+    q_trans = jnp.asarray(qa.trans)
+    Q = qa.n_states
+    nb, n_max = fr.n_boundary, fr.n_max
+    slot_of = fr.slot_index()
+    fs = int(fr.part[s])
+
+    # forward: (s, u_s) within s's fragment
+    f = engine.single_source_regular(
+        arrs["esrc"][fs], arrs["edst"][fs], arrs["labels"][fs],
+        arrs["gids"][fs], q_labels, q_trans,
+        jnp.int32(fr.owner_local[s]), jnp.int32(qa.start),
+        jnp.int32(s), jnp.int32(t), n_max=n_max)            # [n+1, Q]
+    direct = f[int(slot_of[t, fs]), Q - 1]
+
+    # reverse: to (t, u_t) within every fragment (covers the t column)
+    t_slots = jnp.asarray(slot_of[t, :])                    # [k]
+    rev = jax.vmap(
+        lambda es, ed, lab, gid, tslot: engine.reverse_target_regular(
+            es, ed, lab, gid, q_labels, q_trans, tslot,
+            jnp.int32(s), jnp.int32(t), n_max=n_max))(
+        arrs["esrc"], arrs["edst"], arrs["labels"], arrs["gids"],
+        t_slots)                                            # [k, n+1, Q]
+
+    if nb == 0:
+        return bool(direct)
+    sb = f[jnp.asarray(fr.arrays["tgt_local"][fs, :nb])]    # [nb, Q]
+    local_b = fr.owner_local[fr.bnodes]
+    tc = rev[jnp.asarray(cache.part_b), jnp.asarray(local_b), :]  # [nb, Q]
+    from ..kernels.bool_matmul.ops import or_and_matmul
+    sbc = or_and_matmul(sb.reshape(1, nb * Q), C)[0]
+    ans = direct | jnp.any(sbc & tc.reshape(nb * Q))
+    return bool(ans)

@@ -6,12 +6,20 @@ single collective assembles the dependency matrix, and evalDG runs
 replicated (see DESIGN.md Sec. 2 for why replication beats a coordinator on
 a torus).
 
-Performance-guarantee mapping (checked by tests/test_distributed.py):
+Performance-guarantee mapping (checked by tests/test_guarantees.py):
   * "each site visited once"        -> exactly one collective in the HLO;
   * "traffic O(|V_f|^2)" bits       -> the collective payload is the B x B
-    (bit-packable) Boolean matrix, independent of |G|;
+    Boolean matrix bitpacked into uint32 words (kernels.bitpack_ops): 8x
+    fewer bits than the seed's uint8 shipping, independent of |G|.  pmax
+    over packed words is exact because every payload row is owned by
+    exactly one fragment (all other devices contribute zero words);
   * "time O(|F_m| |V_f|)"           -> per-device localEval work, done in
     parallel; evalDG adds O(diam(G_f) |V_f|^2) replicated FLOPs.
+
+``dis_reach_batch_sharded`` is the batched equivalent (DESIGN.md Sec. 3.3):
+one shard_map program answers N pairs with a SINGLE packed collective that
+carries the boundary matrix rows and all per-pair s-row / t-column
+contributions together.
 """
 from __future__ import annotations
 
@@ -24,8 +32,22 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import engine
+from ..kernels.bitpack_ops.ops import pack_payload, unpack_payload
 from .automaton import QueryAutomaton
+from .bes import bool_closure
 from .fragments import Fragmentation, query_slots
+
+# jax.shard_map moved to the top level after 0.4.x; support both.  The
+# experimental version cannot prove replication through while loops, so it
+# additionally needs check_rep=False (the engine's fixpoints are loops).
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_compat
+
+    def shard_map(f, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_compat(f, **kwargs)
 
 FRAG_AXIS = "frag"
 
@@ -56,9 +78,10 @@ def _specs():
 
 def dis_reach_sharded(fr: Fragmentation, s: int, t: int,
                       mesh: Optional[Mesh] = None):
-    """disReach over a device mesh; returns (answer, D) replicated."""
+    """disReach over a device mesh; returns (answer, D) replicated —
+    D is None for the trivial s == t case (nothing is evaluated)."""
     if s == t:
-        return True
+        return True, None
     mesh = mesh or fragment_mesh(fr.k)
     assert mesh.devices.size == fr.k, "one device (shard) per fragment"
     args = _shard_args(fr, s, t)
@@ -68,14 +91,16 @@ def dis_reach_sharded(fr: Fragmentation, s: int, t: int,
                       "s_local", "t_local"))
     tgt_cols, src_rows, bt = _answer_masks(fr, t)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=(P(), P()))
     def run(esrc, edst, src_local, src_row, tgt_local, s_local, t_local):
         rloc = engine.local_eval_reach(
             esrc[0], edst[0], src_local[0], src_row[0], tgt_local[0],
             s_local[0], t_local[0], n_max=fr.n_max, B=fr.B)
-        # the single collective: OR-reduce the boundary matrices
-        D = jax.lax.pmax(rloc.astype(jnp.uint8), FRAG_AXIS) > 0
+        # the single collective: OR-reduce the bitpacked boundary matrices
+        # (row ownership is disjoint, so pmax over uint32 words == OR)
+        Dp = jax.lax.pmax(pack_payload(rloc), FRAG_AXIS)
+        D = unpack_payload(Dp, fr.B)
         ans = engine.evaldg_reach(D, src_rows, tgt_cols)
         return ans, D
 
@@ -120,7 +145,7 @@ def dis_rpq_sharded(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton,
     specs = _specs()
     in_specs = tuple(specs[k] for k in names)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=P())
     def run(esrc, edst, src_local, src_row, tgt_local, labels, gids,
             s_local, t_local):
@@ -129,7 +154,8 @@ def dis_rpq_sharded(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton,
             labels[0], gids[0], q_labels, q_trans,
             s_local[0], t_local[0], jnp.int32(s), jnp.int32(t),
             n_max=fr.n_max, B=fr.B)
-        D = jax.lax.pmax(rloc.astype(jnp.uint8), FRAG_AXIS) > 0
+        Dp = jax.lax.pmax(pack_payload(rloc), FRAG_AXIS)
+        D = unpack_payload(Dp, fr.B * Q)
         return engine.evaldg_reach(D, src_rows, tgt_cols)
 
     ans = jax.jit(run)(*(args[k] for k in names))
@@ -148,14 +174,108 @@ def lower_reach_hlo(fr: Fragmentation, s: int, t: int,
     in_specs = tuple(specs[k] for k in names)
     tgt_cols, src_rows, _ = _answer_masks(fr, t)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=P())
     def run(esrc, edst, src_local, src_row, tgt_local, s_local, t_local):
         rloc = engine.local_eval_reach(
             esrc[0], edst[0], src_local[0], src_row[0], tgt_local[0],
             s_local[0], t_local[0], n_max=fr.n_max, B=fr.B)
-        D = jax.lax.pmax(rloc.astype(jnp.uint8), FRAG_AXIS) > 0
+        Dp = jax.lax.pmax(pack_payload(rloc), FRAG_AXIS)
+        D = unpack_payload(Dp, fr.B)
         return engine.evaldg_reach(D, src_rows, tgt_cols)
 
     lowered = jax.jit(run).lower(*(args[k] for k in names))
     return lowered.as_text()
+
+
+# ---------------------------------------------------------------------------
+# batched sharded engine: N pairs, ONE packed collective (DESIGN.md Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+def dis_reach_batch_sharded(fr: Fragmentation, pairs,
+                            mesh: Optional[Mesh] = None) -> np.ndarray:
+    """Answer N (s, t) pairs over the device mesh with a single collective.
+
+    Each device contributes, for its own fragment: its rows of the boundary
+    dependency matrix D0 (all-sources local fixpoint), the s-row of every
+    pair whose source it owns, and the t-column entries of every pair for
+    its own in-nodes.  All three ride ONE bitpacked pmax; the closure and
+    the per-pair combine run replicated.
+    """
+    pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    N = len(pairs)
+    if N == 0:
+        return np.zeros(0, dtype=bool)
+    mesh = mesh or fragment_mesh(fr.k)
+    assert mesh.devices.size == fr.k, "one device (shard) per fragment"
+    nb, n_max, k = fr.n_boundary, fr.n_max, fr.k
+    slot_of = fr.slot_index()                              # [n, k]
+    ss, tt = pairs[:, 0], pairs[:, 1]
+
+    # per-device query inputs: [k, N] local slots of s and t (n_max absent)
+    s_slots = np.full((k, N), n_max, dtype=np.int32)
+    s_slots[fr.part[ss], np.arange(N)] = fr.owner_local[ss]
+    t_slots = slot_of[tt, :].T.copy()                      # [k, N]
+    # inverse of src_row: boundary position -> source-row index on owner
+    src_row = fr.arrays["src_row"]                         # [k, S]
+    S = src_row.shape[1]
+    srcidx = np.full((k, nb), S - 1, dtype=np.int32)       # pad row: s slot
+    for i in range(k):
+        own = src_row[i] < fr.B - 2
+        srcidx[i, src_row[i, own]] = np.nonzero(own)[0]
+
+    arrs = {key: jnp.asarray(v) for key, v in fr.arrays.items()}
+    args = (arrs["esrc"], arrs["edst"], arrs["src_local"],
+            jnp.asarray(s_slots), jnp.asarray(t_slots), jnp.asarray(srcidx))
+    in_specs = tuple(P(FRAG_AXIS) for _ in args)
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=P())
+    def run(esrc, edst, src_local, s_slot, t_slot, srcidx):
+        esrc, edst, src_local = esrc[0], edst[0], src_local[0]
+        s_slot, t_slot, srcidx = s_slot[0], t_slot[0], srcidx[0]
+        # query-independent phase: this fragment's all-sources fixpoint
+        F = engine.local_frontier_reach(esrc, edst, src_local,
+                                        n_max=n_max)       # [S, n+1]
+        my = jax.lax.axis_index(FRAG_AXIS)
+        tgt_mine = jnp.asarray(fr.arrays["tgt_local"])[my][:nb]  # [nb]
+        # D0 rows owned by this fragment: [nb, nb]
+        rows = jnp.take(F, srcidx, axis=0)                 # [nb, n+1]
+        d0 = jnp.take(rows, tgt_mine, axis=1)              # [nb, nb]
+        own_rows = jnp.asarray(fr.arrays["src_row"])[my][srcidx] < fr.B - 2
+        d0 = d0 & own_rows[:, None]
+        # per-pair s-rows (pairs whose s lives here; others all-false)
+        fS = jax.vmap(lambda sl: engine.single_source_reach(
+            esrc, edst, sl, n_max=n_max))(s_slot)          # [N, n+1]
+        sb = jnp.take(fS, tgt_mine, axis=1)                # [N, nb]
+        direct = jnp.take_along_axis(fS, t_slot[:, None], axis=1)  # [N, 1]
+        # per-pair t-column entries for this fragment's in-nodes
+        tc = jnp.take(rows, t_slot, axis=1).T              # [N, nb]
+        tc = tc & own_rows[None, :]
+        # ONE collective: rows of [D0 | SB+direct | TC] packed to uint32.
+        # psum, not pmax: tc bits are owned per *column* (the fragment of
+        # boundary node u), so one packed word can mix bits from several
+        # devices.  Every bit is still computed on exactly one device (d0
+        # and sb rows by their owner, tc[:, u] by frag(u)), so the word sum
+        # has no carries and equals the bitwise OR.
+        payload = jnp.concatenate([
+            jnp.concatenate([d0, jnp.zeros((nb, 1), bool)], axis=1),
+            jnp.concatenate([sb, direct], axis=1),
+            jnp.concatenate([tc, jnp.zeros((N, 1), bool)], axis=1),
+        ], axis=0)                                         # [nb+2N, nb+1]
+        merged = unpack_payload(
+            jax.lax.psum(pack_payload(payload), FRAG_AXIS), nb + 1)
+        d0_m = merged[:nb, :nb]
+        sb_m = merged[nb:nb + N, :nb]
+        direct_m = merged[nb:nb + N, nb]
+        tc_m = merged[nb + N:, :nb]
+        # replicated: closure by repeated squaring + per-pair combine
+        C = bool_closure(d0_m)
+        from ..kernels.bool_matmul.ops import or_and_matmul
+        sbc = or_and_matmul(sb_m, C) if nb else sb_m
+        return direct_m | jnp.any(sbc & tc_m, axis=1)
+
+    out = jax.jit(run)(*args)
+    ans = np.array(out)
+    ans[ss == tt] = True
+    return ans

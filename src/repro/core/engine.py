@@ -101,6 +101,122 @@ def _with_query_source(src_local, src_row, s_local, n_max: int, B: int):
 
 
 # ---------------------------------------------------------------------------
+# query-independent frontiers (rvset cache phase; DESIGN.md Sec. 3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def local_frontier_reach(esrc, edst, src_local, *, n_max: int):
+    """All-sources local fixpoint WITHOUT the query slots: frontier[j, v] = 1
+    iff in-node source j reaches local slot v inside this fragment.
+
+    This is the expensive part of localEval and depends only on the
+    fragmentation, so ``core.cache`` computes it once per Fragmentation and
+    reuses it for every subsequent query (amortized rvset).
+    """
+    S = src_local.shape[0]
+    frontier = jnp.zeros((S, n_max + 1), dtype=bool)
+    frontier = frontier.at[jnp.arange(S), src_local].set(True)
+    frontier = frontier.at[:, n_max].set(False)
+    return _propagate_bool(esrc, edst, frontier)
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def local_frontier_dist(esrc, edst, src_local, *, n_max: int):
+    """Tropical counterpart of :func:`local_frontier_reach` (uncapped; the
+    per-query bound is applied at answer time, which is equivalent for
+    shortest distances)."""
+    S = src_local.shape[0]
+    dist = jnp.full((S, n_max + 1), INF, dtype=jnp.int32)
+    dist = dist.at[jnp.arange(S), src_local].min(0)
+    dist = dist.at[:, n_max].set(INF)
+    return _propagate_dist(esrc, edst, dist, INF)
+
+
+# ---------------------------------------------------------------------------
+# per-query propagation (cheap phase against the cache; DESIGN.md Sec. 3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def single_source_reach(esrc, edst, src, *, n_max: int):
+    """One-source Boolean fixpoint on one fragment: frontier [n_max+1] bool.
+    ``src == n_max`` (pad) yields the all-false frontier.  vmap the leading
+    axis of all three args for the batched multi-query path (each query
+    propagates over its own fragment's edge list)."""
+    frontier = jnp.zeros((1, n_max + 1), dtype=bool)
+    frontier = frontier.at[0, src].set(src < n_max)
+    frontier = frontier.at[0, n_max].set(False)
+    return _propagate_bool(esrc, edst, frontier)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def single_source_dist(esrc, edst, src, *, n_max: int):
+    """One-source tropical fixpoint: dist [n_max+1] int32 (INF absent)."""
+    dist = jnp.full((1, n_max + 1), INF, dtype=jnp.int32)
+    dist = dist.at[0, src].min(jnp.where(src < n_max, 0, INF))
+    dist = dist.at[0, n_max].set(INF)
+    return _propagate_dist(esrc, edst, dist, INF)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def single_source_regular(esrc, edst, labels, gids, q_labels, q_trans,
+                          s_slot, q_start, s_gid, t_gid, *, n_max: int):
+    """Per-query product-automaton forward fixpoint from (s, u_s) on s's
+    fragment: f [n_max+1, Q] bool — f[v, q] = 1 iff a path from s occupying
+    the start state reaches local slot v in state q (every step matching)."""
+    Q = q_labels.shape[0]
+    match = _match_matrix(labels, gids, q_labels, s_gid, t_gid)
+    match = match.at[n_max, :].set(False)                     # [n+1, Q]
+    f = jnp.zeros((n_max + 1, Q), dtype=bool)
+    f = f.at[s_slot, q_start].set((s_slot < n_max) & match[s_slot, q_start])
+    # int32 accumulator: an int8 dot wraps once >=128 predecessor states
+    # are simultaneously active (wide alternations)
+    tf = q_trans.astype(jnp.int32)
+
+    def step(state):
+        cur, _ = state
+        # advance the automaton, then push along fragment edges
+        adv = (cur.astype(jnp.int32) @ tf) > 0                # [n+1, Q]
+        msgs = adv[esrc].astype(jnp.int8)                     # [E, Q]
+        agg = jax.ops.segment_max(msgs, edst, num_segments=n_max + 1)
+        new = cur | ((agg > 0) & match)
+        return new, jnp.any(new != cur)
+
+    f, _ = jax.lax.while_loop(lambda st: st[1], step, (f, jnp.any(f)))
+    return f
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def reverse_target_regular(esrc, edst, labels, gids, q_labels, q_trans,
+                           t_slot, s_gid, t_gid, *, n_max: int):
+    """Per-query product-automaton BACKWARD fixpoint to (t, u_t) on one
+    fragment: r [n_max+1, Q] bool — r[v, q] = 1 iff from local slot v
+    occupying state q a local path reaches t (or the stub of t) in the
+    accepting state, with every step's target matching its state.
+
+    vmapped over all fragments this yields the t-column of the dependency
+    matrix without any all-sources work (DESIGN.md Sec. 3.2)."""
+    Q = q_labels.shape[0]
+    match = _match_matrix(labels, gids, q_labels, s_gid, t_gid)
+    match = match.at[n_max, :].set(False)
+    r = jnp.zeros((n_max + 1, Q), dtype=bool)
+    r = r.at[t_slot, Q - 1].set((t_slot < n_max) & match[t_slot, Q - 1])
+    tf = q_trans.astype(jnp.int32)          # int32: see single_source_regular
+
+    def step(state):
+        cur, _ = state
+        ok = (cur & match).astype(jnp.int8)                   # [n+1, Q']
+        msgs = ok[edst]                                       # [E, Q']
+        agg = jax.ops.segment_max(msgs, esrc,
+                                  num_segments=n_max + 1)     # [n+1, Q']
+        pre = ((agg > 0).astype(jnp.int32) @ tf.T) > 0        # [n+1, Q]
+        new = cur | pre
+        return new, jnp.any(new != cur)
+
+    r, _ = jax.lax.while_loop(lambda st: st[1], step, (r, jnp.any(r)))
+    return r
+
+
+# ---------------------------------------------------------------------------
 # localEval: plain reachability (paper Fig. 3, procedure localEval)
 # ---------------------------------------------------------------------------
 
@@ -209,12 +325,13 @@ def local_eval_regular(esrc, edst, src_local, src_row, tgt_local,
         (src_match[:, :, None] & eye[None, :, :]))
     frontier = frontier.at[:, :, n_max, :].set(False)
 
-    tf = q_trans.astype(jnp.int8)
+    tf = q_trans.astype(jnp.int32)          # int32: int8 wraps at >=128
+                                            # simultaneously-active states
 
     def step(state):
         f, _ = state
         # advance automaton: f2[j,q0,v,q'] = OR_q f[j,q0,v,q] & trans[q,q']
-        f2 = (jnp.einsum("sqnp,pr->sqnr", f.astype(jnp.int8), tf) > 0)
+        f2 = (jnp.einsum("sqnp,pr->sqnr", f.astype(jnp.int32), tf) > 0)
         msgs = jnp.take(f2, esrc, axis=2)                        # [S,Q,E,Q]
         msgs = jnp.moveaxis(msgs, 2, 0).astype(jnp.int8)         # [E,S,Q,Q]
         agg = jax.ops.segment_max(msgs, edst, num_segments=n_max + 1)
@@ -248,16 +365,16 @@ def evaldg_reach(D, src_rows, tgt_cols):
     """Single-source fixpoint on the dependency matrix D [B, B] bool.
 
     x := x OR x@D until fixpoint (<= diam(G_f) or-and vector-matrix
-    products); answer: any reachable column in ``tgt_cols``.
-    src_rows / tgt_cols: bool masks [B].
+    products, each dispatched to the Pallas MXU kernel on TPU); answer:
+    any reachable column in ``tgt_cols``.  src_rows / tgt_cols: masks [B].
     """
-    Df = D.astype(jnp.float32)
+    from ..kernels.bool_matmul.ops import or_and_matmul
     # seed the carry from D so its device-varying type matches the body's
     x0 = src_rows | (D[0] & False)
 
     def step(state):
         x, _ = state
-        nxt = x | ((x.astype(jnp.float32) @ Df) > 0)
+        nxt = x | or_and_matmul(x[None, :], D)[0]
         return nxt, jnp.any(nxt != x)
 
     x, _ = jax.lax.while_loop(lambda st: st[1], step, (x0, jnp.any(x0)))
@@ -266,13 +383,15 @@ def evaldg_reach(D, src_rows, tgt_cols):
 
 def evaldg_dist(W, src_rows, tgt_cols):
     """Single-source tropical fixpoint (Bellman-Ford on G_d; the paper uses
-    Dijkstra — Bellman-Ford is the parallel-matrix equivalent).
+    Dijkstra — Bellman-Ford is the parallel-matrix equivalent).  The
+    vector-matrix relax rides the Pallas tropical kernel on TPU.
     Returns min distance onto ``tgt_cols`` (INF if unreachable)."""
+    from ..kernels.tropical_matmul.ops import min_plus_matmul
     d0 = jnp.where(src_rows, 0, INF).astype(jnp.int32) + (W[0] & 0)
 
     def step(state):
         d, _ = state
-        relax = jnp.min(d[:, None] + W, axis=0)
+        relax = min_plus_matmul(d[None, :], W)[0]
         nxt = jnp.minimum(d, relax)
         nxt = jnp.minimum(nxt, INF)
         return nxt, jnp.any(nxt != d)

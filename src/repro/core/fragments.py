@@ -46,10 +46,34 @@ class Fragmentation:
     frag_sizes: np.ndarray    # [k] |F_i| = n_i + e_i  (paper's |F_i|)
     # local index of every *global* node inside its owning fragment
     owner_local: np.ndarray   # [n]
+    # amortized rvset cache (built lazily by core.cache.get_rvset_cache)
+    rvset_cache: object = dataclasses.field(default=None, repr=False,
+                                            compare=False)
+    _slot_of: np.ndarray = dataclasses.field(default=None, repr=False,
+                                             compare=False)
 
     @property
     def B(self) -> int:       # boundary matrix side (|V_f| + 2 query slots)
         return len(self.bnodes) + 2
+
+    @property
+    def n_boundary(self) -> int:   # |V_f| proper (without the query slots)
+        return len(self.bnodes)
+
+    def slot_index(self) -> np.ndarray:
+        """[n, k] int32: local slot of every global node inside every
+        fragment — its owned slot in its home fragment, its virtual-stub
+        slot in fragments that have a cross edge to it, ``n_max`` elsewhere.
+        Query-independent; built once and memoized (the per-query phase of
+        the cached engine is pure gathers against this index)."""
+        if self._slot_of is None:
+            slot_of = np.full((self.g.n, self.k), self.n_max, dtype=np.int32)
+            gids = self.arrays["gids"]               # [k, n_max+1], pad -1
+            for f in range(self.k):
+                valid = np.nonzero(gids[f] >= 0)[0]
+                slot_of[gids[f, valid], f] = valid
+            self._slot_of = slot_of
+        return self._slot_of
 
     @property
     def S_ROW(self) -> int:   # reserved boundary row/col for s
@@ -65,6 +89,15 @@ class Fragmentation:
     def traffic_bits_reach(self) -> int:
         """Upper bound the paper proves: O(|V_f|^2) bits of rvset payload."""
         return self.B * self.B
+
+    def packed_traffic_bits(self, states: int = 1) -> int:
+        """Bits the one collective actually ships once the Boolean payload
+        is bitpacked into uint32 words (kernels.bitpack_ops): rows x
+        ceil(cols/32) words.  ``states`` > 1 gives the product-automaton
+        (B*|Q|)^2-shaped regular case."""
+        from ..kernels.bitpack_ops.ops import packed_bits
+        side = self.B * states
+        return packed_bits(side, side)
 
     def largest_fragment(self) -> int:
         return int(self.frag_sizes.max())

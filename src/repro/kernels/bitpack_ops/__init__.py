@@ -1,5 +1,7 @@
-from .ops import bitpack_bool_matmul, pack_cols, pack_rows, unpack_rows
+from .ops import (bitpack_bool_matmul, pack_cols, pack_payload, pack_rows,
+                  packed_bits, unpack_payload, unpack_rows)
 from .ref import bitpack_matmul_ref, pack_rows_ref
 
 __all__ = ["bitpack_bool_matmul", "pack_cols", "pack_rows", "unpack_rows",
+           "pack_payload", "unpack_payload", "packed_bits",
            "bitpack_matmul_ref", "pack_rows_ref"]

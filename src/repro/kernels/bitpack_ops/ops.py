@@ -28,4 +28,23 @@ def bitpack_bool_matmul(a: jax.Array, b: jax.Array,
     return out[:M, :N]
 
 
-__all__ = ["bitpack_bool_matmul", "pack_rows", "pack_cols", "unpack_rows"]
+def pack_payload(m: jax.Array) -> jax.Array:
+    """Pack a Boolean payload matrix [R, C] into uint32 words [R, ceil(C/32)]
+    for the one collective in ``core.distributed`` (8x fewer bits and bytes
+    on the wire than the seed's uint8-per-entry shipping)."""
+    return pack_rows(m.astype(bool))
+
+
+def unpack_payload(p: jax.Array, n_cols: int) -> jax.Array:
+    """Inverse of :func:`pack_payload` on the replicated side."""
+    return unpack_rows(p, n_cols)
+
+
+def packed_bits(rows: int, cols: int) -> int:
+    """Bits actually shipped for a [rows, cols] Boolean payload once packed:
+    rows x ceil(cols/32) uint32 words."""
+    return rows * ((cols + 31) // 32) * 32
+
+
+__all__ = ["bitpack_bool_matmul", "pack_rows", "pack_cols", "unpack_rows",
+           "pack_payload", "unpack_payload", "packed_bits"]

@@ -1,4 +1,4 @@
-from .ops import bool_matmul
+from .ops import bool_matmul, or_and_matmul
 from .ref import bool_matmul_ref
 
-__all__ = ["bool_matmul", "bool_matmul_ref"]
+__all__ = ["bool_matmul", "or_and_matmul", "bool_matmul_ref"]

@@ -31,3 +31,16 @@ def bool_matmul(a: jax.Array, b: jax.Array, block: int = 128) -> jax.Array:
     out = bool_matmul_pallas(a, b, bm=bm, bn=bn, bk=bk,
                              interpret=not _on_tpu())
     return out[:M, :N]
+
+
+def or_and_matmul(a: jax.Array, b: jax.Array, block: int = 128) -> jax.Array:
+    """Backend-dispatched or-and contraction C = OR_k (a & b).
+
+    The rvset cache / evalDG hot path routes through here: on TPU the MXU
+    Pallas kernel runs compiled; elsewhere the same semiring is one XLA f32
+    matmul + threshold (interpret-mode Pallas would be orders of magnitude
+    slower on CPU, so it is reserved for the kernel unit tests).
+    """
+    if _on_tpu():
+        return bool_matmul(a, b, block=block)
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)) > 0

@@ -1,4 +1,5 @@
-from .ops import tropical_matmul
+from .ops import min_plus_chunked, min_plus_matmul, tropical_matmul
 from .ref import tropical_matmul_ref
 
-__all__ = ["tropical_matmul", "tropical_matmul_ref"]
+__all__ = ["tropical_matmul", "min_plus_matmul", "min_plus_chunked",
+           "tropical_matmul_ref"]

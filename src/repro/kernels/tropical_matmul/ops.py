@@ -25,3 +25,37 @@ def tropical_matmul(a: jax.Array, b: jax.Array, block: int = 128) -> jax.Array:
     out = tropical_matmul_pallas(a, b, bm=block, bn=block, bk=block,
                                  interpret=jax.default_backend() != "tpu")
     return out[:M, :N]
+
+
+def min_plus_chunked(a: jax.Array, b: jax.Array,
+                     row_chunk: int = 16) -> jax.Array:
+    """Pure-jnp row-chunked (min, +) contraction: chunking caps the
+    [C, K, N] broadcast intermediate so the closure of a few-thousand-node
+    boundary stays well under a GiB.  The single shared fallback for every
+    non-TPU min-plus path (bes closures, evalDG_d, batched dist)."""
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    M, K = a.shape
+    if M == 0 or K == 0:        # empty contraction: min over nothing == INF
+        return jnp.full((M, b.shape[1]), INF, jnp.int32)
+
+    def one_chunk(rows):
+        return jnp.min(rows[:, :, None] + b[None, :, :], axis=1)
+
+    if M <= row_chunk:
+        return jnp.minimum(one_chunk(a), INF)
+    pad = (-M) % row_chunk
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)), constant_values=int(INF))
+    chunks = a.reshape(-1, row_chunk, K)
+    out = jax.lax.map(one_chunk, chunks)
+    return jnp.minimum(out.reshape(-1, b.shape[1])[:M], INF)
+
+
+def min_plus_matmul(a: jax.Array, b: jax.Array, block: int = 128,
+                    row_chunk: int = 16) -> jax.Array:
+    """Backend-dispatched (min, +) contraction C = min_k (a + b):
+    the Pallas tropical kernel on TPU, :func:`min_plus_chunked` elsewhere."""
+    if jax.default_backend() == "tpu":
+        return tropical_matmul(a, b, block=block)
+    return min_plus_chunked(a, b, row_chunk=row_chunk)

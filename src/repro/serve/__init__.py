@@ -1,3 +1,4 @@
 from .engine import Request, ServeEngine
+from .query_server import QueryRequest, QueryServer
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "QueryRequest", "QueryServer"]

@@ -1,0 +1,106 @@
+"""Batched reachability-query serving loop (DESIGN.md Sec. 3.4).
+
+Mirrors the LM ``ServeEngine`` slots model for graph queries: requests
+accumulate in a queue and are drained in fixed-size batches through ONE
+jitted ``dis_reach_batch`` / ``dis_dist_batch`` call each (fixed batch
+shape == one compiled program; short batches are padded with a repeat of
+the last request, so the engine never retraces under bursty traffic).
+
+The first ``submit``/``drain`` against a fresh Fragmentation pays the
+amortized rvset-cache build; every batch after that is the cheap per-query
+phase only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.cache import dis_dist_batch, dis_reach_batch, prepare_rvset_cache
+from ..core.fragments import Fragmentation
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    s: int
+    t: int
+    kind: str = "reach"              # "reach" | "dist" | "bounded"
+    bound: Optional[int] = None
+    result: object = None            # bool / int-or-None once served
+
+
+class QueryServer:
+    """Fixed-batch continuous server over one Fragmentation."""
+
+    def __init__(self, fr: Fragmentation, batch_size: int = 64,
+                 warm: bool = True, with_dist: bool = False):
+        """``with_dist=True`` eagerly builds the tropical cache too;
+        the default leaves it to build lazily on the first dist/bounded
+        query, so reach-only servers never pay for it."""
+        assert batch_size > 0
+        self.fr = fr
+        self.batch_size = batch_size
+        self.with_dist = with_dist
+        self._queue: List[QueryRequest] = []
+        self.batches_run = 0
+        if warm:
+            prepare_rvset_cache(fr, with_dist=with_dist)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, s: int, t: int, kind: str = "reach",
+               bound: Optional[int] = None) -> QueryRequest:
+        assert kind in ("reach", "dist", "bounded")
+        if kind == "bounded" and bound is None:
+            raise ValueError("bounded queries require a bound")
+        req = QueryRequest(int(s), int(t), kind, bound)
+        self._queue.append(req)
+        return req
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- serving loop ------------------------------------------------------
+
+    def drain(self) -> List[QueryRequest]:
+        """Serve the whole queue in fixed-size batches; returns the served
+        requests with ``result`` filled in, in submission order."""
+        served: List[QueryRequest] = []
+        while self._queue:
+            chunk = self._queue[: self.batch_size]
+            del self._queue[: len(chunk)]
+            self._serve_batch(chunk)
+            served.extend(chunk)
+        return served
+
+    def _serve_batch(self, reqs: List[QueryRequest]) -> None:
+        pad = self.batch_size - len(reqs)
+        padded = reqs + [reqs[-1]] * pad          # repeat: no retrace
+        pairs = np.array([(r.s, r.t) for r in padded], dtype=np.int64)
+        # one jitted call per kind present in the batch
+        kinds = {r.kind for r in reqs}
+        if "reach" in kinds:
+            ans = dis_reach_batch(self.fr, pairs)
+            for i, r in enumerate(reqs):
+                if r.kind == "reach":
+                    r.result = bool(ans[i])
+        if kinds & {"dist", "bounded"}:
+            d = dis_dist_batch(self.fr, pairs)
+            for i, r in enumerate(reqs):
+                if r.kind == "dist":
+                    r.result = None if d[i] < 0 else int(d[i])
+                elif r.kind == "bounded":
+                    r.result = bool(0 <= d[i] <= r.bound)
+        self.batches_run += 1
+
+    # -- convenience -------------------------------------------------------
+
+    def serve_pairs(self, pairs: Sequence[Tuple[int, int]],
+                    kind: str = "reach") -> List[object]:
+        """Submit + drain in one call; returns the results for ``pairs``
+        only (any previously queued requests are served too, but their
+        results stay on their own request objects)."""
+        mine = [self.submit(s, t, kind=kind) for s, t in pairs]
+        self.drain()
+        return [r.result for r in mine]

@@ -1,0 +1,119 @@
+"""Minimal deterministic fallback for ``hypothesis`` (used when the real
+package is not installed; see conftest.py).
+
+Implements just the surface this test-suite uses — ``given``, ``settings``,
+and the ``strategies`` entries ``integers``, ``lists``, ``sampled_from``,
+``booleans``, ``data`` — as a seeded pseudo-random example generator.  Each
+test function gets a deterministic stream derived from its name, so runs
+are reproducible.  No shrinking, no database; with real hypothesis
+installed (CI) this module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn, name="strategy"):
+        self._draw = draw_fn
+        self._name = name
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"<stub {self._name}>"
+
+
+def integers(min_value=0, max_value=1 << 30):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     f"integers({min_value},{max_value})")
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans")
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))], "sampled_from")
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.example_from(rng) for _ in range(size)]
+    return _Strategy(draw, f"lists[{min_size},{max_size}]")
+
+
+class DataObject:
+    """Stand-in for hypothesis' interactive data strategy."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.example_from(self._rng)
+
+
+def data():
+    return _Strategy(lambda rng: DataObject(rng), "data")
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*g_args, **g_kwargs):
+    assert not g_args, "stub given() supports keyword strategies only"
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random((base << 16) ^ i)
+                drawn = {k: s.example_from(rng) for k, s in g_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in g_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    data = staticmethod(data)
+
+
+def install(sys_modules) -> None:
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    import types
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "lists", "data"):
+        setattr(strategies, name, globals()[name])
+    hyp.strategies = strategies
+    hyp.__stub__ = True
+    sys_modules["hypothesis"] = hyp
+    sys_modules["hypothesis.strategies"] = strategies

@@ -6,3 +6,11 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
+
+# Property tests use hypothesis when installed; otherwise fall back to the
+# deterministic stub so the suite still runs in hermetic environments.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install(sys.modules)

@@ -1,0 +1,185 @@
+"""Amortized rvset cache + batched engine vs the seed path and oracles.
+
+The cached/batched evaluation (core.cache) must answer exactly like the
+seed single-query engine (core.api) and the networkx oracles on arbitrary
+graph x fragmentation x query — the cache is an optimization, never a
+semantic change.
+"""
+import zlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_query_automaton, dis_dist, dis_dist_batch,
+                        dis_dist_cached, dis_reach, dis_reach_batch,
+                        dis_reach_cached, dis_rpq, dis_rpq_cached,
+                        fragment_graph, get_rvset_cache, prepare_rvset_cache)
+from repro.graph import erdos_renyi, random_partition
+from repro.serve import QueryServer
+
+from oracles import oracle_dist, oracle_reach, oracle_rpq
+
+
+def _case(n, m, k, seed):
+    g = erdos_renyi(n, m, n_labels=4, seed=seed)
+    return g, fragment_graph(g, random_partition(g, k, seed), k)
+
+
+# ---------------------------------------------------------------------------
+# cached/batched == seed == oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_property_batched_reach_matches_seed_and_oracle(data):
+    n = data.draw(st.integers(4, 24), label="n")
+    m = data.draw(st.integers(0, 60), label="m")
+    k = data.draw(st.integers(1, 5), label="k")
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    part = np.asarray(
+        data.draw(st.lists(st.integers(0, k - 1), min_size=n, max_size=n),
+                  label="part"), dtype=np.int32)
+    fr = fragment_graph(g, part, k)
+    pairs = [(data.draw(st.integers(0, n - 1)), data.draw(st.integers(0, n - 1)))
+             for _ in range(4)]
+    got = dis_reach_batch(fr, pairs)
+    for (s, t), ans in zip(pairs, got):
+        want = oracle_reach(g, s, t)
+        assert bool(ans) == want
+        assert dis_reach(fr, s, t).answer == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_property_batched_dist_matches_oracle(data):
+    n = data.draw(st.integers(4, 20))
+    m = data.draw(st.integers(0, 50))
+    k = data.draw(st.integers(1, 4))
+    seed = data.draw(st.integers(0, 10_000))
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    fr = fragment_graph(g, random_partition(g, k, seed), k)
+    pairs = [(data.draw(st.integers(0, n - 1)), data.draw(st.integers(0, n - 1)))
+             for _ in range(4)]
+    got = dis_dist_batch(fr, pairs)
+    for (s, t), d in zip(pairs, got):
+        want = oracle_dist(g, s, t)
+        assert (None if d < 0 else int(d)) == want
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_cached_single_query_wrappers(seed):
+    rng = np.random.default_rng(seed)
+    g, fr = _case(int(rng.integers(8, 36)), int(rng.integers(5, 110)),
+                  int(rng.integers(1, 5)), seed)
+    for _ in range(8):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        assert dis_reach_cached(fr, s, t).answer == oracle_reach(g, s, t)
+        res = dis_dist_cached(fr, s, t)
+        assert res.distance == oracle_dist(g, s, t)
+    # bounded semantics agree with the seed path (answer AND distance:
+    # a failed bounded query reports no distance on both paths)
+    for bound in (0, 1, 3):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        got = dis_dist_cached(fr, s, t, bound=bound)
+        want = dis_dist(fr, s, t, bound=bound)
+        assert got.answer == want.answer
+        assert got.distance == want.distance
+
+
+@pytest.mark.parametrize("regex", ["0* 1*", "(0|1)* 2", ". . .", "0+ (1|2)*"])
+def test_cached_rpq_matches_seed_and_oracle(regex):
+    # crc32, not hash(): string hashing is salted per process and would
+    # make the drawn pairs irreproducible across runs
+    rng = np.random.default_rng(zlib.crc32(regex.encode()))
+    g, fr = _case(18, 50, 3, int(rng.integers(100)))
+    qa = build_query_automaton(regex, lambda x: int(x))
+    for _ in range(6):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        want = oracle_rpq(g, s, t, qa)
+        assert dis_rpq(fr, s, t, qa).answer == want
+        assert dis_rpq_cached(fr, s, t, qa).answer == want
+
+
+def test_rpq_closure_cached_per_automaton():
+    g, fr = _case(16, 40, 2, 0)
+    qa = build_query_automaton("0* 1", lambda x: int(x))
+    dis_rpq_cached(fr, 0, 5, qa)
+    cache = get_rvset_cache(fr)
+    assert len(cache.rpq_closures) == 1
+    dis_rpq_cached(fr, 1, 6, qa)           # same automaton: no new closure
+    assert len(cache.rpq_closures) == 1
+    qb = build_query_automaton("1* 0", lambda x: int(x))
+    dis_rpq_cached(fr, 0, 5, qb)
+    assert len(cache.rpq_closures) == 2
+
+
+# ---------------------------------------------------------------------------
+# cache mechanics + stats
+# ---------------------------------------------------------------------------
+
+def test_cache_is_built_once_and_reused():
+    g, fr = _case(20, 60, 3, 7)
+    assert fr.rvset_cache is None
+    c1 = prepare_rvset_cache(fr)
+    c2 = get_rvset_cache(fr)
+    assert c1 is c2 and fr.rvset_cache is c1
+    # dist parts attach lazily to the same cache object
+    assert c1.bl_dist is None
+    dis_dist_batch(fr, [(0, 1)])
+    assert c1.bl_dist is not None
+
+
+def test_payload_bits_report_bitpacked_size():
+    g, fr = _case(30, 90, 3, 3)
+    B = fr.B
+    words = (B + 31) // 32
+    res = dis_reach(fr, 0, 1)
+    assert res.stats.payload_bits == B * words * 32
+    qa = build_query_automaton("0*", lambda x: int(x))
+    side = B * qa.n_states
+    assert (dis_rpq(fr, 0, 1, qa).stats.payload_bits ==
+            side * ((side + 31) // 32) * 32)
+
+
+def test_empty_and_degenerate_batches():
+    g, fr = _case(10, 20, 2, 1)
+    assert dis_reach_batch(fr, np.zeros((0, 2), np.int64)).shape == (0,)
+    assert bool(dis_reach_batch(fr, [(3, 3)])[0])         # s == t
+    # single fragment: no boundary at all (nb == 0)
+    g1 = erdos_renyi(12, 30, seed=2)
+    fr1 = fragment_graph(g1, np.zeros(12, np.int32), 1)
+    pairs = [(0, 5), (5, 0), (2, 2)]
+    got = dis_reach_batch(fr1, pairs)
+    for (s, t), a in zip(pairs, got):
+        assert bool(a) == oracle_reach(g1, s, t)
+    d = dis_dist_batch(fr1, pairs)
+    for (s, t), dd in zip(pairs, d):
+        assert (None if dd < 0 else int(dd)) == oracle_dist(g1, s, t)
+
+
+# ---------------------------------------------------------------------------
+# serving loop
+# ---------------------------------------------------------------------------
+
+def test_query_server_matches_oracle_across_batches():
+    g, fr = _case(36, 110, 4, 11)
+    srv = QueryServer(fr, batch_size=8)
+    rng = np.random.default_rng(0)
+    pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n)))
+             for _ in range(19)]                       # odd: forces padding
+    res = srv.serve_pairs(pairs)
+    assert res == [oracle_reach(g, s, t) for s, t in pairs]
+    assert srv.batches_run == 3
+
+    for s, t in pairs[:5]:
+        srv.submit(s, t, kind="dist")
+    srv.submit(pairs[0][0], pairs[0][1], kind="bounded", bound=2)
+    out = srv.drain()
+    for r in out:
+        want = oracle_dist(g, r.s, r.t)
+        if r.kind == "dist":
+            assert r.result == want
+        else:
+            assert r.result == (want is not None and want <= 2)

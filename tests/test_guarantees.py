@@ -27,8 +27,8 @@ sys.path.insert(0, "__SRC__")
 import numpy as np
 from repro.graph import erdos_renyi, random_partition
 from repro.core import fragment_graph, build_query_automaton
-from repro.core.distributed import (dis_reach_sharded, dis_rpq_sharded,
-                                    lower_reach_hlo)
+from repro.core.distributed import (dis_reach_sharded, dis_reach_batch_sharded,
+                                    dis_rpq_sharded, lower_reach_hlo)
 import networkx as nx
 
 g = erdos_renyi(48, 140, n_labels=4, seed=5)
@@ -45,15 +45,49 @@ for _ in range(6):
     ans, _ = dis_reach_sharded(fr, s, t)
     ok &= (ans == nx.has_path(G, s, t))
 
+pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n))) for _ in range(16)]
+batch = dis_reach_batch_sharded(fr, pairs)
+ok_batch = all(bool(a) == nx.has_path(G, s, t)
+               for (s, t), a in zip(pairs, batch))
+
+# adversarial for the packed collective: chain graph, round-robin partition
+# -> every node is boundary, paths are unique, and packed words mix bits
+# owned by different fragments (any dropped bit flips an answer)
+from repro.graph.graph import Graph
+nc, kc = 64, 8
+gc = Graph(nc, np.arange(nc - 1), np.arange(1, nc), np.zeros(nc, np.int32))
+frc = fragment_graph(gc, (np.arange(nc) % kc).astype(np.int32), kc)
+cpairs = [(0, nc - 1), (5, 60), (10, 11), (63, 0), (30, 30), (2, 50)]
+cbatch = dis_reach_batch_sharded(frc, cpairs)
+ok_batch &= all(bool(a) == (s <= t) for (s, t), a in zip(cpairs, cbatch))
+
+# degenerate: single fragment, no boundary nodes at all
+g1 = erdos_renyi(12, 30, seed=2)
+fr1 = fragment_graph(g1, np.zeros(12, np.int32), 1)
+G1 = nx.DiGraph(); G1.add_nodes_from(range(12))
+G1.add_edges_from(zip(g1.src.tolist(), g1.dst.tolist()))
+p1 = [(0, 5), (5, 0), (2, 2), (1, 7)]
+b1 = dis_reach_batch_sharded(fr1, p1)
+ok_batch &= all(bool(a) == nx.has_path(G1, s, t) for (s, t), a in zip(p1, b1))
+
 qa = build_query_automaton("(0|1|2|3)*", lambda x: int(x))
 ans_rpq = dis_rpq_sharded(fr, 0, 17, qa)
 
 hlo = lower_reach_hlo(fr, 0, 17)
-colls = re.findall(
+matches = list(re.finditer(
     r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|all_to_all|"
-    r"collective_permute)[a-z_]*", hlo)
-print(json.dumps({"ok": bool(ok), "collectives": colls,
-                  "rpq": bool(ans_rpq)}))
+    r"collective_permute)[a-z_]*", hlo))
+colls = [m.group(0) for m in matches]
+# the collective's operand/result types live within the op's text window
+spans = [hlo[m.start():m.start() + 800] for m in matches]
+packed = all("ui32" in s for s in spans)
+W = (fr.B + 31) // 32
+shape = f"{fr.B}x{W}xui32"
+payload_shape_ok = any(shape in s for s in spans)
+print(json.dumps({"ok": bool(ok), "ok_batch": bool(ok_batch),
+                  "collectives": colls, "rpq": bool(ans_rpq),
+                  "packed": bool(packed),
+                  "payload_shape_ok": bool(payload_shape_ok)}))
 """
 
 
@@ -72,8 +106,22 @@ def test_sharded_engine_correct(sharded_report):
 
 
 def test_one_collective_round(sharded_report):
-    """Guarantee (1): each site visited once == exactly one collective."""
+    """Guarantee (1): each site visited once == exactly one collective —
+    still true after the payload is bitpacked."""
     assert len(sharded_report["collectives"]) == 1, sharded_report
+
+
+def test_collective_payload_is_bitpacked(sharded_report):
+    """The one collective ships B x ceil(B/32) uint32 words (8x fewer bits
+    than the seed's B x B uint8 payload), not the unpacked matrix."""
+    assert sharded_report["packed"], sharded_report
+    assert sharded_report["payload_shape_ok"], sharded_report
+
+
+def test_batched_sharded_engine_correct(sharded_report):
+    """dis_reach_batch_sharded: N pairs, one packed collective, answers
+    match the oracle."""
+    assert sharded_report["ok_batch"], sharded_report
 
 
 def test_traffic_independent_of_graph_size():
