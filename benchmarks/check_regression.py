@@ -1,0 +1,87 @@
+"""Benchmark-regression gate (CI step, see .github/workflows/ci.yml).
+
+Compares the fresh fast-mode results (``BENCH_*.fast.json``, written by
+``python -m benchmarks.run --fast``) against the committed full-run
+baselines (``BENCH_*.json``), and sanity-checks the committed baselines
+themselves, so a perf regression fails the build instead of silently
+shipping in an artifact:
+
+* ``warm_batched_per_query_us`` (fast run) must not exceed 2x the committed
+  full-run value — the fast config is ~4x smaller, so honoring this bound
+  is easy unless the warm path actually regressed;
+* ``payload_shrink_factor`` (fast run) must stay >= 8 — the bitpacked
+  collective must keep its 8x advantage over uint8 shipping;
+* committed ``BENCH_pr3.json`` must show incremental repair beating a full
+  cache rebuild by >= 5x median at the Table-2 config, and the fast run
+  must clear a small-graph floor (overheads dominate tiny matrices).
+
+Exits non-zero with a FAIL line per violated bound.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+WARM_REGRESSION_FACTOR = 2.0
+MIN_PAYLOAD_SHRINK = 8.0
+MIN_REPAIR_SPEEDUP_FULL = 5.0
+MIN_REPAIR_SPEEDUP_FAST = 2.0
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = argv[0] if argv else "."
+    failures = []
+
+    def check(name, ok, detail):
+        status = "PASS" if ok else "FAIL"
+        print(f"{status} {name}: {detail}")
+        if not ok:
+            failures.append(name)
+
+    base2 = _load(f"{root}/BENCH_pr2.json")
+    fast2 = _load(f"{root}/BENCH_pr2.fast.json")
+    warm_base = base2["warm_batched_per_query_us"]
+    warm_fast = fast2["warm_batched_per_query_us"]
+    check(
+        "warm_batched_per_query_us",
+        warm_fast <= WARM_REGRESSION_FACTOR * warm_base,
+        f"fast {warm_fast:.1f}us vs committed {warm_base:.1f}us "
+        f"(limit {WARM_REGRESSION_FACTOR}x)",
+    )
+    shrink = fast2["payload_shrink_factor"]
+    check(
+        "payload_shrink_factor",
+        shrink >= MIN_PAYLOAD_SHRINK,
+        f"fast {shrink:.2f} (floor {MIN_PAYLOAD_SHRINK})",
+    )
+
+    base3 = _load(f"{root}/BENCH_pr3.json")
+    fast3 = _load(f"{root}/BENCH_pr3.fast.json")
+    sp_full = base3["repair_speedup_median"]
+    check(
+        "repair_speedup_median (committed, Table-2 cfg)",
+        sp_full >= MIN_REPAIR_SPEEDUP_FULL,
+        f"committed {sp_full:.2f}x (floor {MIN_REPAIR_SPEEDUP_FULL}x)",
+    )
+    sp_fast = fast3["repair_speedup_median"]
+    check(
+        "repair_speedup_median (fast run)",
+        sp_fast >= MIN_REPAIR_SPEEDUP_FAST,
+        f"fast {sp_fast:.2f}x (floor {MIN_REPAIR_SPEEDUP_FAST}x)",
+    )
+
+    if failures:
+        print(f"regression gate FAILED: {failures}", file=sys.stderr)
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

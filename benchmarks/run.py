@@ -1,10 +1,19 @@
 """Benchmark entry point: one function per paper table/figure.
+
 Prints ``name,us_per_call,derived`` CSV rows (plus section headers) and
-emits BENCH_pr2.json with the amortized-cache before/after numbers."""
+emits the amortized-cache (BENCH_pr2) and incremental-maintenance
+(BENCH_pr3) result files.  ``--fast`` runs scaled-down configs and writes
+``BENCH_*.fast.json`` so the committed full-run baselines stay intact —
+``benchmarks.check_regression`` compares the two in CI.
+
+Any sub-experiment failure is reported at the end and the process exits
+non-zero, so a CI benchmark step cannot pass vacuously.
+"""
 from __future__ import annotations
 
 import json
 import sys
+import traceback
 
 from . import paper_experiments as pe
 
@@ -22,39 +31,88 @@ def _emit(section: str, rows):
 def main() -> None:
     fast = "--fast" in sys.argv
     scale = 0.25 if fast else 1.0
+    suffix = ".fast.json" if fast else ".json"
+    failures = []
 
-    print("# paper Table 2: reachability time/traffic/visits")
-    _emit("table2", pe.table2_reachability(n=int(3000 * scale) + 100,
-                                           m=int(12000 * scale) + 400))
-    print("# paper Fig 11(a): vary card(F)")
-    _emit("fig11a", pe.fig11a_vary_fragments(n=int(4000 * scale) + 100,
-                                             m=int(16000 * scale) + 400))
-    print("# paper Fig 11(b): vary size(F)")
-    sizes = (500, 1000, 2000) if fast else (1000, 2000, 4000, 8000)
-    _emit("fig11b", pe.fig11b_vary_size(sizes=sizes))
-    print("# paper Exp-2: bounded reachability")
-    _emit("exp2", pe.exp2_bounded(n=int(3000 * scale) + 100,
-                                  m=int(12000 * scale) + 400))
-    print("# paper Exp-3: regular reachability + query complexity")
-    _emit("exp3", pe.exp3_regular(n=int(800 * scale) + 100,
-                                  m=int(3200 * scale) + 400))
-    print("# paper Exp-4: MapReduce")
-    _emit("exp4", pe.exp4_mapreduce(n=int(800 * scale) + 100,
-                                    m=int(3200 * scale) + 400))
+    def section(title, fn):
+        print(title)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(title)
 
-    print("# ISSUE-2: amortized rvset cache + batched queries (Table-2 cfg)")
-    amort = pe.exp_amortized(n=int(3000 * scale) + 100,
-                             m=int(12000 * scale) + 400,
-                             n_q=16 if fast else 64)
-    print(f"amortized/cold,{amort['cold_single_query_us']:.1f},")
-    print(f"amortized/warm_batched,{amort['warm_batched_per_query_us']:.1f},"
-          f"speedup={amort['speedup']:.1f};"
-          f"payload_shrink={amort['payload_shrink_factor']:.2f}")
-    out = "BENCH_pr2.json"
-    with open(out, "w") as f:
-        json.dump({"experiment": "amortized_rvset_cache",
-                   "fast_mode": fast, **amort}, f, indent=2)
-    print(f"# wrote {out}")
+    def table2():
+        _emit("table2", pe.table2_reachability(n=int(3000 * scale) + 100,
+                                               m=int(12000 * scale) + 400))
+
+    def fig11a():
+        _emit("fig11a", pe.fig11a_vary_fragments(n=int(4000 * scale) + 100,
+                                                 m=int(16000 * scale) + 400))
+
+    def fig11b():
+        sizes = (500, 1000, 2000) if fast else (1000, 2000, 4000, 8000)
+        _emit("fig11b", pe.fig11b_vary_size(sizes=sizes))
+
+    def exp2():
+        _emit("exp2", pe.exp2_bounded(n=int(3000 * scale) + 100,
+                                      m=int(12000 * scale) + 400))
+
+    def exp3():
+        _emit("exp3", pe.exp3_regular(n=int(800 * scale) + 100,
+                                      m=int(3200 * scale) + 400))
+
+    def exp4():
+        _emit("exp4", pe.exp4_mapreduce(n=int(800 * scale) + 100,
+                                        m=int(3200 * scale) + 400))
+
+    def amortized():
+        amort = pe.exp_amortized(n=int(3000 * scale) + 100,
+                                 m=int(12000 * scale) + 400,
+                                 n_q=16 if fast else 64)
+        print(f"amortized/cold,{amort['cold_single_query_us']:.1f},")
+        print("amortized/warm_batched,"
+              f"{amort['warm_batched_per_query_us']:.1f},"
+              f"speedup={amort['speedup']:.1f};"
+              f"payload_shrink={amort['payload_shrink_factor']:.2f}")
+        out = "BENCH_pr2" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "amortized_rvset_cache",
+                       "fast_mode": fast, **amort}, f, indent=2)
+        print(f"# wrote {out}")
+
+    def incremental():
+        inc = pe.exp_incremental(n=int(3000 * scale) + 100,
+                                 m=int(12000 * scale) + 400,
+                                 n_q=16 if fast else 64)
+        print(f"incremental/repair,{inc['repair_ms_median'] * 1e3:.1f},"
+              f"speedup_vs_rebuild={inc['repair_speedup_median']:.1f}")
+        print("incremental/full_rebuild,"
+              f"{inc['full_rebuild_ms_median'] * 1e3:.1f},")
+        print("incremental/warm_query_after_deltas,"
+              f"{inc['warm_after_delta_us']:.1f},"
+              f"before={inc['warm_before_delta_us']:.1f}")
+        out = "BENCH_pr3" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "incremental_cache_maintenance",
+                       "fast_mode": fast, **inc}, f, indent=2)
+        print(f"# wrote {out}")
+
+    section("# paper Table 2: reachability time/traffic/visits", table2)
+    section("# paper Fig 11(a): vary card(F)", fig11a)
+    section("# paper Fig 11(b): vary size(F)", fig11b)
+    section("# paper Exp-2: bounded reachability", exp2)
+    section("# paper Exp-3: regular reachability + query complexity", exp3)
+    section("# paper Exp-4: MapReduce", exp4)
+    section("# ISSUE-2: amortized rvset cache + batched queries (Table-2 "
+            "cfg)", amortized)
+    section("# ISSUE-3: incremental cache maintenance under edge deltas",
+            incremental)
+
+    if failures:
+        print(f"# FAILED sections ({len(failures)}): {failures}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,8 @@ plus the amortized rvset cache answering a whole query batch at once.
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import sys
+import sys  # noqa: E402
+
 sys.path.insert(0, "src")
 
 import numpy as np                                       # noqa: E402

@@ -60,7 +60,7 @@ def main():
     qa2 = build_query_automaton("DB*", g.label_of)
     rr2 = dis_rpq(fr, s, t, qa2)
     print(f"q_rr(Ann, Mark, DB*)     -> {rr2.answer}   "
-          f"(no pure-DB chain exists — paper Ex. 1)")
+          "(no pure-DB chain exists — paper Ex. 1)")
 
 
 if __name__ == "__main__":

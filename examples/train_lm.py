@@ -60,7 +60,7 @@ def main():
                 and not crashed["done"]:
             crashed["done"] = True
             print(f"!! simulated node failure at step {step} — recovering "
-                  f"from checkpoint")
+                  "from checkpoint")
             raise RuntimeError("simulated failure")
 
     import time
@@ -69,8 +69,8 @@ def main():
 
     def data_fn(step):
         if step % 20 == 0:
-            l = float(loss_fn(trainer.state["params"], eval_batch))
-            print(f"step {step:4d}  eval_loss={l:.4f}  "
+            ev = float(loss_fn(trainer.state["params"], eval_batch))
+            print(f"step {step:4d}  eval_loss={ev:.4f}  "
                   f"({time.time()-t0:.0f}s)")
         return stream.batch_at(step)
 

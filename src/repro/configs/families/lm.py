@@ -10,8 +10,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ...models import transformer as T
-from .base import (CellProgram, abstract_like, dp, make_train_step,
-                   opt_state_like, sds, spec_tree)
+from .base import (CellProgram, dp, make_train_step, opt_state_like,
+                   sds, spec_tree)
 
 LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 

@@ -11,7 +11,9 @@ from .api import (QueryResult, dis_dist, dis_dist_batch, dis_dist_cached,
 from .automaton import QueryAutomaton, accepts, build_query_automaton
 from .cache import RvsetCache, get_rvset_cache, prepare_rvset_cache
 from .engine import INF, QueryStats
-from .fragments import Fragmentation, fragment_graph, query_slots
+from .fragments import (DeltaReport, Fragmentation, GraphDelta,
+                        fragment_graph, query_slots)
+from .incremental import UpdateStats, apply_delta
 
 __all__ = [
     "QueryResult", "dis_dist", "dis_reach", "dis_rpq", "dis_rpq_regex",
@@ -20,4 +22,5 @@ __all__ = [
     "RvsetCache", "prepare_rvset_cache", "get_rvset_cache",
     "QueryAutomaton", "accepts", "build_query_automaton",
     "INF", "QueryStats", "Fragmentation", "fragment_graph", "query_slots",
+    "GraphDelta", "DeltaReport", "apply_delta", "UpdateStats",
 ]

@@ -13,19 +13,26 @@ Answer extraction (coordinator side):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..graph.graph import Graph
 from . import cache as _cache
 from . import engine
 from .automaton import QueryAutomaton, build_query_automaton
 from .cache import dis_dist_batch, dis_reach_batch
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, fragment_graph, query_slots
+
+__all__ = [      # including the batched entry points re-exported from .cache
+    "QueryResult", "dis_reach", "dis_dist", "dis_rpq", "dis_rpq_regex",
+    "dis_reach_batch", "dis_dist_batch",
+    "dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
+    "QueryAutomaton", "build_query_automaton",
+    "Fragmentation", "fragment_graph", "query_slots", "INF", "QueryStats",
+]
 
 
 def _as_jnp(fr: Fragmentation):

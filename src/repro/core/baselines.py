@@ -14,6 +14,7 @@ comparison isolates the *algorithm*, not the data layout.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -21,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .engine import _propagate_bool
-from .fragments import Fragmentation, query_slots
+from .fragments import Fragmentation
 
 
 @dataclasses.dataclass
@@ -35,9 +36,6 @@ class BaselineResult:
 # ---------------------------------------------------------------------------
 # disReach_n: centralized
 # ---------------------------------------------------------------------------
-
-import functools
-
 
 @functools.partial(jax.jit, static_argnames=("n",))
 def _bfs_full(src, dst, s, *, n):
@@ -63,7 +61,6 @@ def dis_reach_m(fr: Fragmentation, s: int, t: int,
     if s == t:
         return BaselineResult(True, 0, 0, 0)
     arrs = {k: jnp.asarray(v) for k, v in fr.arrays.items()}
-    qs = query_slots(fr, s, t)
     k, n_max, B = fr.k, fr.n_max, fr.B
     max_rounds = max_rounds or (fr.B + 2)
 

@@ -68,10 +68,22 @@ class RvsetCache:
     dist_closure: Optional[jax.Array] = None  # [nb, nb] int32, diag 0
     rpq_closures: Dict[Tuple, jax.Array] = dataclasses.field(
         default_factory=dict)         # automaton key -> [(nb*Q), (nb*Q)]
+    # incremental-maintenance state (core.incremental; DESIGN.md Sec. 3.5)
+    version: int = 0                  # bumped on every repair/recompute
+    repair_debt: float = 0.0          # deletion-recompute cost accumulator
 
     @property
     def nb(self) -> int:
         return self.fr.n_boundary
+
+    def refresh_device_arrays(self) -> None:
+        """Re-upload the (host-mutated) fragment arrays after a delta; the
+        cached rpq closures are dropped (they bake in the old arrays) and
+        rebuild lazily on the next regular query."""
+        self.arrays = {k: jnp.asarray(v) for k, v in self.fr.arrays.items()}
+        self.part_b = self.fr.boundary_owner()
+        self.rpq_closures.clear()
+        self.version += 1
 
 
 def _boundary_rows(fr: Fragmentation, frontiers, fill, combine):
@@ -100,7 +112,7 @@ def prepare_rvset_cache(fr: Fragmentation, with_dist: bool = False,
         D0 = _gather_boundary_matrix(fr, bl, fill=False)
         C = bes.bool_closure(D0, use_pallas=use_pallas)
         cache = RvsetCache(fr=fr, arrays=arrs, bl_frontier=bl, closure=C,
-                           part_b=fr.part[fr.bnodes].astype(np.int32))
+                           part_b=fr.boundary_owner())
         fr.rvset_cache = cache
     if with_dist and cache.bl_dist is None:
         arrs = cache.arrays
@@ -121,8 +133,7 @@ def _gather_boundary_matrix(fr: Fragmentation, bl, fill):
     nb = fr.n_boundary
     if nb == 0:
         return jnp.zeros((0, 0), bl.dtype)
-    part_b = fr.part[fr.bnodes]
-    cols = fr.arrays["tgt_local"][part_b][:, :nb]          # [nb, nb]
+    cols = fr.arrays["tgt_local"][fr.boundary_owner()][:, :nb]   # [nb, nb]
     return jnp.take_along_axis(bl, jnp.asarray(cols), axis=1)
 
 
@@ -332,7 +343,7 @@ def rpq_cached(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton) -> bool:
     if nb == 0:
         return bool(direct)
     sb = f[jnp.asarray(fr.arrays["tgt_local"][fs, :nb])]    # [nb, Q]
-    local_b = fr.owner_local[fr.bnodes]
+    local_b = fr.boundary_local()     # spare slots -> pad row (all-false)
     tc = rev[jnp.asarray(cache.part_b), jnp.asarray(local_b), :]  # [nb, Q]
     from ..kernels.bool_matmul.ops import or_and_matmul
     sbc = or_and_matmul(sb.reshape(1, nb * Q), C)[0]

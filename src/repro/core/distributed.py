@@ -279,3 +279,133 @@ def dis_reach_batch_sharded(fr: Fragmentation, pairs,
     ans = np.array(out)
     ans[ss == tt] = True
     return ans
+
+
+# ---------------------------------------------------------------------------
+# sharded incremental cache maintenance (DESIGN.md Sec. 3.5)
+# ---------------------------------------------------------------------------
+
+def _changed_row_inputs(fr: Fragmentation, row_ids: np.ndarray):
+    """Per-device gather indices for the changed boundary rows: for each
+    fragment, the source-row index of every changed position it owns
+    (pad ``s_max-1`` — the reserved s slot, never a real in-node row —
+    elsewhere) plus the ownership mask."""
+    k, S = fr.k, fr.s_max
+    src_row = fr.arrays["src_row"]                         # [k, S]
+    srcidx = np.full((k, len(row_ids)), S - 1, dtype=np.int32)
+    own = np.zeros((k, len(row_ids)), dtype=bool)
+    inv = {}
+    for f in range(k):
+        for j in np.nonzero(src_row[f] < fr.B - 2)[0]:
+            inv[int(src_row[f, j])] = (f, int(j))
+    for c, r in enumerate(row_ids):
+        f, j = inv[int(r)]
+        srcidx[f, c] = j
+        own[f, c] = True
+    return srcidx, own
+
+
+@functools.lru_cache(maxsize=32)
+def _update_rows_jitted(mesh: Mesh, nb: int, n_max: int):
+    """Compiled-program cache for the sharded update: one entry per
+    (mesh, boundary, slot) geometry; jit then caches per changed-row
+    bucket shape, so steady-state deltas never retrace."""
+    in_specs = tuple(P(FRAG_AXIS) for _ in range(6))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=(P(), P(FRAG_AXIS)))
+    def run(esrc, edst, init, srcidx, own, tgt_local):
+        F = engine.resume_frontier_reach(esrc[0], edst[0], init[0],
+                                         n_max=n_max)      # [S, n+1]
+        tgt_mine = tgt_local[0][:nb]
+        rows = jnp.take(F, srcidx[0], axis=0)              # [r, n+1]
+        d0r = jnp.take(rows, tgt_mine, axis=1)             # [r, nb]
+        d0r = d0r & own[0][:, None]
+        # the ONE update collective: changed rows only, bitpacked (pmax ==
+        # OR: each row is owned by exactly one device, others ship zeros)
+        merged = unpack_payload(jax.lax.pmax(pack_payload(d0r), FRAG_AXIS),
+                                nb)
+        return merged, F[None]
+
+    return jax.jit(run)
+
+
+def _update_rows_program(fr: Fragmentation, warm_init: np.ndarray,
+                         row_ids: np.ndarray, mesh: Mesh):
+    assert mesh.devices.size == fr.k, "one device (shard) per fragment"
+    srcidx, own = _changed_row_inputs(fr, row_ids)
+    arrs = (jnp.asarray(fr.arrays["esrc"]), jnp.asarray(fr.arrays["edst"]),
+            jnp.asarray(warm_init), jnp.asarray(srcidx), jnp.asarray(own),
+            jnp.asarray(fr.arrays["tgt_local"]))
+    return _update_rows_jitted(mesh, fr.n_boundary, fr.n_max), arrs
+
+
+def update_rows_sharded(fr: Fragmentation, warm_init: np.ndarray,
+                        row_ids: np.ndarray, mesh: Optional[Mesh] = None):
+    """Recompute the changed D0 rows over the device mesh.
+
+    Every device resumes its own fragment's all-sources fixpoint from
+    ``warm_init`` (clean fragments are already at fixpoint and converge in
+    one relaxation), then contributes the rows of ``row_ids`` it owns.
+    The ONE collective ships only the *changed* bitpacked rows —
+    ``len(row_ids) x ceil(nb/32)`` uint32 words, not the whole matrix.
+
+    Returns ``(rows, frontiers)``: the merged [r, nb] changed rows
+    (replicated) and the per-fragment [k, S, n_max+1] frontiers (sharded
+    outputs, no extra communication).
+    """
+    mesh = mesh or fragment_mesh(fr.k)
+    run, arrs = _update_rows_program(fr, warm_init, row_ids, mesh)
+    return run(*arrs)
+
+
+def lower_update_hlo(fr: Fragmentation, warm_init: np.ndarray,
+                     row_ids: np.ndarray,
+                     mesh: Optional[Mesh] = None) -> str:
+    """Lowered HLO of the sharded cache-update program — used by tests to
+    assert the changed-rows-only payload structurally."""
+    mesh = mesh or fragment_mesh(fr.k)
+    run, arrs = _update_rows_program(fr, warm_init, row_ids, mesh)
+    return run.lower(*arrs).as_text()
+
+
+def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None):
+    """Sharded twin of :func:`repro.core.incremental.apply_delta` for
+    insert-only deltas against a reach cache: per-fragment frontier resume
+    runs on the fragment's own device and the update collective ships only
+    the changed bitpacked D0 rows; the rank-style closure update runs
+    replicated (exactly like evalDG).  Deletions, rebuilds, and tropical
+    caches fall back to the host path.
+    """
+    from . import incremental
+    from .cache import _boundary_rows, get_rvset_cache
+
+    cache = get_rvset_cache(fr)
+    if (delta.is_empty() or delta.n_del or cache.bl_dist is not None):
+        return incremental.apply_delta(fr, delta)
+    warm = np.zeros((fr.k, fr.s_max, fr.n_max + 1), dtype=bool)
+    bl_host = np.asarray(cache.bl_frontier)
+    report = fr.apply_delta(delta)
+    if report.rebuilt:
+        return incremental.rebuild_cache(fr, cache.version, report,
+                                         with_dist=False,
+                                         reason=report.reason)
+    for f in range(fr.k):
+        init, _, _ = incremental._frontier_init(fr, f, bl_host, dist=False)
+        warm[f] = np.asarray(init)
+    row_ids = incremental.changed_row_ids(fr, report.dirty)
+    if row_ids.size == 0:      # dirty fragments own no boundary rows:
+        incremental._update_frontiers(cache, report.dirty, warm=True)
+        cache.refresh_device_arrays()
+        return incremental.UpdateStats(mode="repair_sharded",
+                                       **incremental._stats_base(report))
+    padded = incremental.pad_row_ids(row_ids, cap=fr.n_boundary)
+    rows_new, fronts = update_rows_sharded(fr, warm, padded, mesh=mesh)
+    cache.bl_frontier = _boundary_rows(fr, fronts, False,
+                                       lambda ref, v: ref.max(v))
+    cache.closure = incremental._rank_update_bool(cache.closure, rows_new,
+                                                  padded)
+    cache.refresh_device_arrays()
+    return incremental.UpdateStats(mode="repair_sharded",
+                                   changed_rows=int(row_ids.size),
+                                   **incremental._stats_base(report))

@@ -132,6 +132,28 @@ def local_frontier_dist(esrc, edst, src_local, *, n_max: int):
     return _propagate_dist(esrc, edst, dist, INF)
 
 
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def resume_frontier_reach(esrc, edst, frontier, *, n_max: int):
+    """Continue a Boolean all-sources fixpoint from a warm state.
+
+    Used by incremental cache repair (DESIGN.md Sec. 3.5): after edge
+    *insertions* the old converged frontier is a valid under-approximation,
+    so re-running the fixpoint from it converges in O(new-path length)
+    relaxations instead of O(diam).  ``frontier``: [S, n_max+1] bool with
+    each row's own source bit already set."""
+    frontier = frontier.at[:, n_max].set(False)
+    return _propagate_bool(esrc, edst, frontier)
+
+
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def resume_frontier_dist(esrc, edst, dist, *, n_max: int):
+    """Tropical twin of :func:`resume_frontier_reach`: the old distances
+    are realizable upper bounds after insertions, so relaxation from them
+    converges to the new exact distances."""
+    dist = dist.at[:, n_max].set(INF)
+    return _propagate_dist(esrc, edst, dist, INF)
+
+
 # ---------------------------------------------------------------------------
 # per-query propagation (cheap phase against the cache; DESIGN.md Sec. 3)
 # ---------------------------------------------------------------------------

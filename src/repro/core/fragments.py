@@ -19,15 +19,85 @@ every virtual-node origin), plus two reserved dynamic slots for the query
 endpoints: row/col ``B-2`` is ``s`` and col ``B-1`` is ``t`` (the paper adds
 ``s`` to iset and ``t`` to oset at query time; we reserve static slots so the
 compiled program is query-independent).
+
+Dynamic graphs (DESIGN.md Sec. 3.5): a fragmentation built with
+``reserve_*`` headroom additionally carries *spare* capacity — extra edge
+slots, virtual-stub slots, source slots, and boundary positions
+``nb_active .. nb_cap-1`` — so ``apply_delta`` can absorb edge insertions
+and deletions without changing any device array shape (jit-stable).  Spare
+boundary slots are inert until activated: no source row maps to them, their
+frontier rows stay empty, and their target columns point at the pad node,
+so every existing kernel reads them as all-false / INF.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from ..graph.graph import Graph
+
+
+@dataclasses.dataclass
+class GraphDelta:
+    """A batch of edge insertions and deletions against a fragmented graph.
+
+    Node set and partition are fixed; only edges change (the paper's
+    fragmentation is node-partitioned, so edge churn never moves a node
+    between sites).  Deletions must name existing edges; one (u, v) entry
+    removes one occurrence (multi-edges are deleted one at a time).
+    """
+
+    add_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    add_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    del_src: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    del_dst: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+
+    def __post_init__(self):
+        for name in ("add_src", "add_dst", "del_src", "del_dst"):
+            setattr(self, name, np.asarray(getattr(self, name),
+                                           dtype=np.int64).reshape(-1))
+        assert self.add_src.shape == self.add_dst.shape
+        assert self.del_src.shape == self.del_dst.shape
+
+    @property
+    def n_add(self) -> int:
+        return int(self.add_src.size)
+
+    @property
+    def n_del(self) -> int:
+        return int(self.del_src.size)
+
+    def is_empty(self) -> bool:
+        return self.n_add == 0 and self.n_del == 0
+
+    @classmethod
+    def insert(cls, edges) -> "GraphDelta":
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        return cls(add_src=e[:, 0], add_dst=e[:, 1])
+
+    @classmethod
+    def delete(cls, edges) -> "GraphDelta":
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        return cls(del_src=e[:, 0], del_dst=e[:, 1])
+
+
+@dataclasses.dataclass
+class DeltaReport:
+    """What ``Fragmentation.apply_delta`` changed (drives cache repair)."""
+
+    dirty: np.ndarray            # [k] bool: fragments with local changes
+    new_boundary: List[int]      # global ids activated into spare slots
+    n_add_intra: int = 0
+    n_add_cross: int = 0
+    n_del: int = 0
+    rebuilt: bool = False        # capacity exhausted -> rebuilt from scratch
+    reason: str = ""
 
 
 @dataclasses.dataclass
@@ -51,14 +121,43 @@ class Fragmentation:
                                             compare=False)
     _slot_of: np.ndarray = dataclasses.field(default=None, repr=False,
                                              compare=False)
+    # --- dynamic-graph bookkeeping (host-side; see apply_delta) ------------
+    nb_cap: int = -1          # boundary slot capacity (-1: len(bnodes))
+    n_edges: np.ndarray = dataclasses.field(default=None, repr=False,
+                                            compare=False)   # [k] used slots
+    src_fill: np.ndarray = dataclasses.field(default=None, repr=False,
+                                             compare=False)  # [k] used rows
+    stubs: List[dict] = dataclasses.field(default=None, repr=False,
+                                          compare=False)  # gid -> stub slot
+    reserve: Dict[str, int] = dataclasses.field(default=None, repr=False,
+                                                compare=False)
 
     @property
-    def B(self) -> int:       # boundary matrix side (|V_f| + 2 query slots)
-        return len(self.bnodes) + 2
+    def B(self) -> int:       # boundary matrix side (capacity + query slots)
+        return (self.nb_cap if self.nb_cap >= 0 else len(self.bnodes)) + 2
 
     @property
-    def n_boundary(self) -> int:   # |V_f| proper (without the query slots)
+    def n_boundary(self) -> int:   # boundary matrix rows (|V_f| + spares)
+        return self.B - 2
+
+    @property
+    def nb_active(self) -> int:    # |V_f| proper: activated boundary slots
         return len(self.bnodes)
+
+    def boundary_owner(self) -> np.ndarray:
+        """[n_boundary] int32: owning fragment of each boundary slot (spare
+        slots map to fragment 0 — inert, since no frontier row or target
+        column ever carries data for them)."""
+        own = np.zeros(self.n_boundary, dtype=np.int32)
+        own[: self.nb_active] = self.part[self.bnodes]
+        return own
+
+    def boundary_local(self) -> np.ndarray:
+        """[n_boundary] int32: local slot of each boundary node inside its
+        owning fragment (pad slot ``n_max`` for spare positions)."""
+        loc = np.full(self.n_boundary, self.n_max, dtype=np.int32)
+        loc[: self.nb_active] = self.owner_local[self.bnodes]
+        return loc
 
     def slot_index(self) -> np.ndarray:
         """[n, k] int32: local slot of every global node inside every
@@ -102,23 +201,198 @@ class Fragmentation:
     def largest_fragment(self) -> int:
         return int(self.frag_sizes.max())
 
+    # -- dynamic updates (DESIGN.md Sec. 3.5) ------------------------------
+
+    def apply_delta(self, delta: GraphDelta) -> DeltaReport:
+        """Apply a :class:`GraphDelta` to the fragmentation *in place*.
+
+        Insertions land in pre-allocated padded slots (edges, virtual stubs,
+        source rows, boundary positions) so no device array changes shape;
+        deletions compact the owning fragment's edge list.  When any
+        capacity is exhausted the whole fragmentation is rebuilt from the
+        updated graph (``report.rebuilt``) with the same reserve headroom.
+
+        Only host structures are touched here — cache repair is the job of
+        :mod:`repro.core.incremental` (which calls this first).
+        """
+        g_new = self._updated_graph(delta)
+        report = DeltaReport(dirty=np.zeros(self.k, dtype=bool),
+                             new_boundary=[], n_del=delta.n_del)
+        if delta.is_empty():
+            return report
+        try:
+            self._apply_insertions(delta, report)
+            self._apply_deletions(delta, report)
+        except _CapacityExceeded as exc:
+            self._rebuild_in_place(g_new)
+            report.dirty[:] = True
+            report.rebuilt = True
+            report.reason = str(exc)
+            return report
+        self.g = g_new
+        return report
+
+    def _updated_graph(self, delta: GraphDelta) -> Graph:
+        """The post-delta graph (validates deletions against existing
+        edges); leaves ``self.g`` untouched.  O((m + n_del) log m) host
+        work via one sort of the edge keys — the update path must stay
+        cheap relative to the repair it triggers."""
+        g = self.g
+        keep = np.ones(g.m, dtype=bool)
+        if delta.n_del:
+            key = g.src * np.int64(g.n) + g.dst
+            order = np.argsort(key, kind="stable")
+            skey = key[order]
+            taken: Dict[int, int] = {}      # dup deletes take distinct ids
+            for u, v in zip(delta.del_src, delta.del_dst):
+                kk = int(u) * g.n + int(v)
+                lo = int(np.searchsorted(skey, kk, "left"))
+                hi = int(np.searchsorted(skey, kk, "right"))
+                j = lo + taken.get(kk, 0)
+                if j >= hi:
+                    raise ValueError(
+                        f"delta deletes nonexistent edge {u}->{v}")
+                taken[kk] = taken.get(kk, 0) + 1
+                keep[order[j]] = False
+        if delta.n_add:
+            ends = np.concatenate([delta.add_src, delta.add_dst])
+            if ends.min(initial=0) < 0 or ends.max(initial=-1) >= g.n:
+                raise ValueError("delta inserts edge with out-of-range "
+                                 f"node id (n={g.n})")
+        src = np.concatenate([g.src[keep], delta.add_src])
+        dst = np.concatenate([g.dst[keep], delta.add_dst])
+        return Graph(g.n, src, dst, g.labels, g.label_names)
+
+    def _apply_insertions(self, delta: GraphDelta, report: DeltaReport):
+        esrc, edst = self.arrays["esrc"], self.arrays["edst"]
+        for u, w in zip(delta.add_src, delta.add_dst):
+            i = int(self.part[u])
+            if self.part[w] == i:                      # intra-fragment edge
+                dst_slot = int(self.owner_local[w])
+                report.n_add_intra += 1
+            else:                                      # cross edge -> stub
+                self._ensure_boundary(int(w), report)
+                dst_slot = self._ensure_stub(i, int(w))
+                report.n_add_cross += 1
+            slot = int(self.n_edges[i])
+            if slot >= self.e_max:
+                raise _CapacityExceeded(f"edge slots of fragment {i}")
+            esrc[i, slot] = self.owner_local[u]
+            edst[i, slot] = dst_slot
+            self.n_edges[i] += 1
+            self.frag_sizes[i] += 1
+            report.dirty[i] = True
+
+    def _apply_deletions(self, delta: GraphDelta, report: DeltaReport):
+        esrc, edst = self.arrays["esrc"], self.arrays["edst"]
+        for u, w in zip(delta.del_src, delta.del_dst):
+            i = int(self.part[u])
+            if self.part[w] == i:
+                dst_slot = int(self.owner_local[w])
+            else:
+                dst_slot = self.stubs[i].get(int(w), -1)
+            ne = int(self.n_edges[i])
+            hits = np.nonzero((esrc[i, :ne] == self.owner_local[u])
+                              & (edst[i, :ne] == dst_slot))[0]
+            if dst_slot < 0 or hits.size == 0:
+                raise _CapacityExceeded(   # stale bookkeeping: rebuild
+                    f"deleted edge {u}->{w} not found in fragment {i}")
+            j = int(hits[0])
+            esrc[i, j], edst[i, j] = esrc[i, ne - 1], edst[i, ne - 1]
+            esrc[i, ne - 1] = edst[i, ne - 1] = self.n_max     # pad self-loop
+            self.n_edges[i] -= 1
+            self.frag_sizes[i] -= 1
+            report.dirty[i] = True
+        # boundary membership / stubs are left as-is on deletion: a boundary
+        # node with no remaining in-edges is inert (sound, costs one slot)
+        # until the debt heuristic in core.incremental forces a rebuild.
+
+    def _ensure_boundary(self, w: int, report: DeltaReport):
+        """Activate node ``w`` as a boundary in-node in a spare slot."""
+        if self.b_index[w] >= 0:
+            return
+        pos = self.nb_active
+        if pos >= self.n_boundary:
+            raise _CapacityExceeded("boundary slots")
+        j = int(self.part[w])                 # owner gains a source row
+        row = int(self.src_fill[j])
+        if row >= self.s_max - 1:             # last row is reserved for s
+            raise _CapacityExceeded(f"source rows of fragment {j}")
+        self.arrays["src_local"][j, row] = self.owner_local[w]
+        self.arrays["src_row"][j, row] = pos
+        self.src_fill[j] += 1
+        self.b_index[w] = pos
+        self.bnodes = np.append(self.bnodes, w)
+        report.dirty[j] = True
+        report.new_boundary.append(w)
+
+    def _ensure_stub(self, i: int, w: int) -> int:
+        """Virtual-stub slot of global node ``w`` inside fragment ``i``."""
+        slot = self.stubs[i].get(w)
+        if slot is not None:
+            return slot
+        slot = int(self.arrays["n_local"][i])
+        if slot >= self.n_max:
+            raise _CapacityExceeded(f"local slots of fragment {i}")
+        self.stubs[i][w] = slot
+        self.arrays["gids"][i, slot] = w
+        self.arrays["labels"][i, slot] = self.g.labels[w]
+        self.arrays["n_local"][i] = slot + 1
+        self.arrays["tgt_local"][i, self.b_index[w]] = slot
+        if self._slot_of is not None:
+            self._slot_of[w, i] = slot
+        return slot
+
+    def rebuild(self) -> None:
+        """Re-fragment the current graph from scratch (compacts stale
+        boundary slots and stubs left behind by deletions, and restores
+        the full reserve headroom).  Drops the attached cache."""
+        self._rebuild_in_place(self.g)
+
+    def _rebuild_in_place(self, g_new: Graph):
+        """Re-fragment the updated graph with the same reserves and adopt
+        the result, keeping this object's identity (callers hold refs)."""
+        fresh = fragment_graph(g_new, self.part, self.k,
+                               **(self.reserve or {}))
+        for field in dataclasses.fields(self):
+            setattr(self, field.name, getattr(fresh, field.name))
+        self.rvset_cache = None
+
+
+class _CapacityExceeded(Exception):
+    """A delta outgrew the pre-allocated padded slots: rebuild instead."""
+
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
 def fragment_graph(g: Graph, part: np.ndarray, k: int,
-                   pad_multiple: int = 8) -> Fragmentation:
-    """Build the padded fragmentation (host, numpy)."""
+                   pad_multiple: int = 8, reserve_boundary: int = 0,
+                   reserve_edges: int = 0, reserve_stubs: int = 0,
+                   reserve_sources: Optional[int] = None) -> Fragmentation:
+    """Build the padded fragmentation (host, numpy).
+
+    ``reserve_*`` pre-allocate headroom for :meth:`Fragmentation.apply_delta`
+    so dynamic updates keep every device array shape static:
+    ``reserve_boundary`` spare boundary positions (new in-nodes),
+    ``reserve_edges`` extra edge slots per fragment, ``reserve_stubs`` extra
+    virtual-node slots per fragment, and ``reserve_sources`` extra source
+    rows per fragment (defaults to ``reserve_boundary`` — the worst case is
+    every new in-node landing in one fragment).
+    """
     part = np.asarray(part, dtype=np.int32)
     assert part.shape == (g.n,)
     assert part.min(initial=0) >= 0 and part.max(initial=0) < k
+    if reserve_sources is None:
+        reserve_sources = reserve_boundary
 
     cross_mask = part[g.src] != part[g.dst]
     bnodes = np.unique(g.dst[cross_mask])          # in-nodes == V_f core
     b_index = np.full(g.n, -1, dtype=np.int64)
     b_index[bnodes] = np.arange(len(bnodes))
-    B = len(bnodes) + 2
+    nb_cap = len(bnodes) + reserve_boundary
+    B = nb_cap + 2
 
     # --- per-fragment local structures -------------------------------------
     glists = [np.where(part == i)[0] for i in range(k)]
@@ -148,13 +422,14 @@ def fragment_graph(g: Graph, part: np.ndarray, k: int,
         frag_dst[i].append(sm[int(w)])
 
     n_locals = [len(glists[i]) + len(stub_maps[i]) for i in range(k)]
-    n_max = _round_up(max(n_locals) if k else 1, pad_multiple)
-    e_max = _round_up(max((len(frag_src[i]) for i in range(k)), default=1),
+    n_max = _round_up((max(n_locals) if k else 1) + reserve_stubs,
                       pad_multiple)
+    e_max = _round_up(max((len(frag_src[i]) for i in range(k)), default=1)
+                      + reserve_edges, pad_multiple)
     e_max = max(e_max, 1)
 
     in_counts = [int(np.sum(part[bnodes] == i)) for i in range(k)] or [0]
-    s_maxr = max(in_counts) + 1            # +1 reserved source slot for s
+    s_maxr = max(in_counts) + 1 + reserve_sources  # +1 reserved slot for s
 
     esrc = np.full((k, e_max), n_max, dtype=np.int32)
     edst = np.full((k, e_max), n_max, dtype=np.int32)
@@ -189,10 +464,18 @@ def fragment_graph(g: Graph, part: np.ndarray, k: int,
     arrays = dict(esrc=esrc, edst=edst, gids=gids, labels=labels,
                   src_local=src_local, src_row=src_row, tgt_local=tgt_local,
                   n_local=np.array(n_locals, dtype=np.int32))
+    reserve = dict(pad_multiple=pad_multiple,
+                   reserve_boundary=reserve_boundary,
+                   reserve_edges=reserve_edges, reserve_stubs=reserve_stubs,
+                   reserve_sources=reserve_sources)
     return Fragmentation(g=g, part=part, k=k, bnodes=bnodes, b_index=b_index,
                          n_max=n_max, e_max=e_max, s_max=s_maxr,
                          arrays=arrays, frag_sizes=frag_sizes,
-                         owner_local=owner_local)
+                         owner_local=owner_local, nb_cap=nb_cap,
+                         n_edges=np.array([len(frag_src[i])
+                                           for i in range(k)], np.int64),
+                         src_fill=np.array(in_counts[:k] or [0], np.int64),
+                         stubs=stub_maps, reserve=reserve)
 
 
 def query_slots(fr: Fragmentation, s: int, t: int) -> Dict[str, np.ndarray]:

@@ -7,7 +7,7 @@ tests assert.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

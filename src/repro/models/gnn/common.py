@@ -8,7 +8,7 @@ frontier propagation and the recsys EmbeddingBag).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

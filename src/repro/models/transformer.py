@@ -9,7 +9,6 @@ One parameterized implementation covers the five assigned LM architectures
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

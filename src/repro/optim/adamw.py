@@ -3,7 +3,7 @@ No optax in this environment — the optimizer is part of the substrate."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

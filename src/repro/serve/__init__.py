@@ -1,4 +1,5 @@
 from .engine import Request, ServeEngine
-from .query_server import QueryRequest, QueryServer
+from .query_server import QueryRequest, QueryServer, UpdateRequest
 
-__all__ = ["Request", "ServeEngine", "QueryRequest", "QueryServer"]
+__all__ = ["Request", "ServeEngine", "QueryRequest", "QueryServer",
+           "UpdateRequest"]

@@ -7,7 +7,7 @@ a request queue into fixed-size decode batches, per-request stop lengths).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,4 @@
-"""Batched reachability-query serving loop (DESIGN.md Sec. 3.4).
+"""Batched reachability-query serving loop (DESIGN.md Sec. 3.4-3.5).
 
 Mirrors the LM ``ServeEngine`` slots model for graph queries: requests
 accumulate in a queue and are drained in fixed-size batches through ONE
@@ -6,19 +6,27 @@ jitted ``dis_reach_batch`` / ``dis_dist_batch`` call each (fixed batch
 shape == one compiled program; short batches are padded with a repeat of
 the last request, so the engine never retraces under bursty traffic).
 
+Dynamic graphs: ``submit_delta`` enqueues a :class:`GraphDelta` *into the
+same queue*, so updates and queries interleave in submission order with
+snapshot consistency — every query submitted before an update is answered
+against the pre-delta cache (the drain loop flushes pending query batches
+before applying an update; a batch never spans an update boundary), and
+every query submitted after it sees the incrementally repaired cache.
+
 The first ``submit``/``drain`` against a fresh Fragmentation pays the
 amortized rvset-cache build; every batch after that is the cheap per-query
-phase only.
+phase only, and updates cost an incremental repair instead of a rebuild.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.cache import dis_dist_batch, dis_reach_batch, prepare_rvset_cache
-from ..core.fragments import Fragmentation
+from ..core.fragments import Fragmentation, GraphDelta
+from ..core.incremental import UpdateStats, apply_delta
 
 
 @dataclasses.dataclass
@@ -28,10 +36,18 @@ class QueryRequest:
     kind: str = "reach"              # "reach" | "dist" | "bounded"
     bound: Optional[int] = None
     result: object = None            # bool / int-or-None once served
+    # rvset-cache version the answer was computed against (snapshot id)
+    cache_version: Optional[int] = None
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    delta: GraphDelta
+    result: Optional[UpdateStats] = None   # filled once applied
 
 
 class QueryServer:
-    """Fixed-batch continuous server over one Fragmentation."""
+    """Fixed-batch continuous server over one (dynamic) Fragmentation."""
 
     def __init__(self, fr: Fragmentation, batch_size: int = 64,
                  warm: bool = True, with_dist: bool = False):
@@ -42,8 +58,9 @@ class QueryServer:
         self.fr = fr
         self.batch_size = batch_size
         self.with_dist = with_dist
-        self._queue: List[QueryRequest] = []
+        self._queue: List[Union[QueryRequest, UpdateRequest]] = []
         self.batches_run = 0
+        self.updates_applied = 0
         if warm:
             prepare_rvset_cache(fr, with_dist=with_dist)
 
@@ -58,20 +75,61 @@ class QueryServer:
         self._queue.append(req)
         return req
 
+    def submit_delta(self, delta: GraphDelta) -> UpdateRequest:
+        """Enqueue a graph update.  It is applied during ``drain`` in
+        submission order: earlier queries see the pre-delta snapshot,
+        later ones the repaired cache."""
+        req = UpdateRequest(delta)
+        self._queue.append(req)
+        return req
+
     def pending(self) -> int:
         return len(self._queue)
 
     # -- serving loop ------------------------------------------------------
 
-    def drain(self) -> List[QueryRequest]:
-        """Serve the whole queue in fixed-size batches; returns the served
-        requests with ``result`` filled in, in submission order."""
-        served: List[QueryRequest] = []
-        while self._queue:
-            chunk = self._queue[: self.batch_size]
-            del self._queue[: len(chunk)]
-            self._serve_batch(chunk)
-            served.extend(chunk)
+    def drain(self) -> List[Union[QueryRequest, UpdateRequest]]:
+        """Serve the whole queue in submission order; returns the served
+        requests with ``result`` filled in.  Queries are drained in
+        fixed-size batches; an update first flushes the queries queued
+        before it (snapshot consistency), then repairs the cache."""
+        queue, self._queue = self._queue, []   # new submits go to a fresh
+        served: List[Union[QueryRequest, UpdateRequest]] = []   # queue
+        chunk: List[QueryRequest] = []         # never grows past batch_size
+
+        def flush():
+            while chunk:
+                batch = chunk[: self.batch_size]
+                self._serve_batch(batch)       # raises -> batch stays queued
+                del chunk[: len(batch)]
+                served.extend(batch)
+
+        idx = 0                                # next queue element to handle
+        try:
+            while idx < len(queue):
+                req = queue[idx]
+                idx += 1
+                if isinstance(req, UpdateRequest):
+                    try:
+                        flush()                # pre-delta queries answered
+                    except Exception:
+                        idx -= 1               # update untouched: retryable
+                        raise
+                    # a bad update is reported via the raised exception and
+                    # dropped; everything queued after it survives
+                    req.result = apply_delta(self.fr, req.delta)
+                    self.updates_applied += 1
+                    served.append(req)
+                else:
+                    chunk.append(req)
+                    if len(chunk) >= self.batch_size:
+                        flush()
+            flush()
+        except Exception:
+            # unserved queries + the un-iterated tail stay queued for the
+            # next drain (ahead of anything submitted meanwhile)
+            self._queue[:0] = chunk + queue[idx:]
+            raise
         return served
 
     def _serve_batch(self, reqs: List[QueryRequest]) -> None:
@@ -92,6 +150,9 @@ class QueryServer:
                     r.result = None if d[i] < 0 else int(d[i])
                 elif r.kind == "bounded":
                     r.result = bool(0 <= d[i] <= r.bound)
+        version = self.fr.rvset_cache.version     # built by the calls above
+        for r in reqs:
+            r.cache_version = version
         self.batches_run += 1
 
     # -- convenience -------------------------------------------------------

@@ -3,7 +3,6 @@ assigned arch and run one actual step on CPU, asserting finite outputs.
 (The FULL configs are exercised only via the dry-run, which lowers
 ShapeDtypeStructs without allocation.)"""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -92,9 +92,9 @@ def test_gat_forward_and_loss():
     assert np.isfinite(np.asarray(logits)).all()
     labels = jnp.asarray(rng.integers(0, 5, 24), jnp.int32)
     mask = jnp.asarray(rng.random(24) < 0.5, jnp.float32)
-    l = gat.loss(cfg, params, x, g, labels, mask)
+    lval = gat.loss(cfg, params, x, g, labels, mask)
     grads = jax.grad(lambda p: gat.loss(cfg, p, x, g, labels, mask))(params)
-    assert np.isfinite(float(l))
+    assert np.isfinite(float(lval))
     assert all(np.isfinite(np.asarray(v)).all()
                for v in jax.tree.leaves(grads))
 
