@@ -13,7 +13,12 @@ shipping in an artifact:
   collective must keep its 8x advantage over uint8 shipping;
 * committed ``BENCH_pr3.json`` must show incremental repair beating a full
   cache rebuild by >= 5x median at the Table-2 config, and the fast run
-  must clear a small-graph floor (overheads dominate tiny matrices).
+  must clear a small-graph floor (overheads dominate tiny matrices);
+* mixed-kind session batches (``BENCH_pr4``): the fast-run warm
+  per-query cost must not exceed 2x the committed full-run value (the fast
+  config is ~3x smaller), and fusing a mixed reach+dist+RPQ batch must
+  beat the per-kind serving loop (committed >= 3x, fast >= a small-graph
+  floor — the RPQ group is what the per-kind loop cannot batch).
 
 Exits non-zero with a FAIL line per violated bound.
 """
@@ -26,6 +31,9 @@ WARM_REGRESSION_FACTOR = 2.0
 MIN_PAYLOAD_SHRINK = 8.0
 MIN_REPAIR_SPEEDUP_FULL = 5.0
 MIN_REPAIR_SPEEDUP_FAST = 2.0
+MIXED_REGRESSION_FACTOR = 2.0
+MIN_FUSED_SPEEDUP_FULL = 3.0
+MIN_FUSED_SPEEDUP_FAST = 1.3
 
 
 def _load(path: str) -> dict:
@@ -74,6 +82,29 @@ def main(argv=None) -> int:
         "repair_speedup_median (fast run)",
         sp_fast >= MIN_REPAIR_SPEEDUP_FAST,
         f"fast {sp_fast:.2f}x (floor {MIN_REPAIR_SPEEDUP_FAST}x)",
+    )
+
+    base4 = _load(f"{root}/BENCH_pr4.json")
+    fast4 = _load(f"{root}/BENCH_pr4.fast.json")
+    mixed_base = base4["mixed_per_query_us"]
+    mixed_fast = fast4["mixed_per_query_us"]
+    check(
+        "mixed_per_query_us",
+        mixed_fast <= MIXED_REGRESSION_FACTOR * mixed_base,
+        f"fast {mixed_fast:.1f}us vs committed {mixed_base:.1f}us "
+        f"(limit {MIXED_REGRESSION_FACTOR}x)",
+    )
+    fs_full = base4["fused_speedup"]
+    check(
+        "fused_speedup (committed)",
+        fs_full >= MIN_FUSED_SPEEDUP_FULL,
+        f"committed {fs_full:.2f}x (floor {MIN_FUSED_SPEEDUP_FULL}x)",
+    )
+    fs_fast = fast4["fused_speedup"]
+    check(
+        "fused_speedup (fast run)",
+        fs_fast >= MIN_FUSED_SPEEDUP_FAST,
+        f"fast {fs_fast:.2f}x (floor {MIN_FUSED_SPEEDUP_FAST}x)",
     )
 
     if failures:

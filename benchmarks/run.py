@@ -104,10 +104,27 @@ def main() -> None:
     section("# paper Exp-2: bounded reachability", exp2)
     section("# paper Exp-3: regular reachability + query complexity", exp3)
     section("# paper Exp-4: MapReduce", exp4)
+    def session_bench():
+        res = pe.exp_session(n=int(800 * scale) + 100,
+                             m=int(3200 * scale) + 400,
+                             n_q=24 if fast else 96)
+        print(f"session/mixed_batch,{res['mixed_per_query_us']:.1f},"
+              f"fused_speedup={res['fused_speedup']:.2f};"
+              f"n_groups={res['n_groups']}")
+        print("session/per_kind_loop,"
+              f"{res['per_kind_loop_per_query_us']:.1f},")
+        out = "BENCH_pr4" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "session_mixed_batches",
+                       "fast_mode": fast, **res}, f, indent=2)
+        print(f"# wrote {out}")
+
     section("# ISSUE-2: amortized rvset cache + batched queries (Table-2 "
             "cfg)", amortized)
     section("# ISSUE-3: incremental cache maintenance under edge deltas",
             incremental)
+    section("# ISSUE-4: unified session, mixed-kind fused batches",
+            session_bench)
 
     if failures:
         print(f"# FAILED sections ({len(failures)}): {failures}",

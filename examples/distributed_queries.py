@@ -1,6 +1,7 @@
 """Distributed-engine demo: one fragment per (fake) device, shard_map
 partial evaluation, vs the message-passing and centralized baselines —
-plus the amortized rvset cache answering a whole query batch at once.
+plus a ``repro.connect`` session answering a mixed reach+dist+RPQ batch
+with one fused execution per (kind, automaton) group.
 
     PYTHONPATH=src python examples/distributed_queries.py
 """
@@ -45,22 +46,31 @@ def main():
               f"{res_m.site_visits} site visits | "
               f"ship-all: {res_n.traffic_bits}b")
 
-    # amortized path: build the rvset cache once, answer a batch in one call
+    # session path: one handle owns the amortized caches and fuses a mixed
+    # reach+dist+RPQ batch into one compiled execution per (kind, automaton)
     import time
-    from repro.core import dis_reach_batch, prepare_rvset_cache
+    import repro
+    from repro.core import Dist, Reach, Rpq
+    session = repro.connect(fr, backend="vmap")
     t0 = time.perf_counter()
-    prepare_rvset_cache(fr)
+    session.warm(with_dist=True)
     build = time.perf_counter() - t0
-    pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n)))
-             for _ in range(64)]
-    dis_reach_batch(fr, pairs)                    # compile
+    queries = []
+    for i in range(64):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        queries.append(Reach(s, t) if i % 3 == 0 else
+                       Dist(s, t) if i % 3 == 1 else
+                       Rpq(s, t, regex="(0|1|2|3)* (4|5)*"))
+    session.run(queries)                          # compile each group once
     t0 = time.perf_counter()
-    ans = dis_reach_batch(fr, pairs)
-    per_q = (time.perf_counter() - t0) / len(pairs) * 1e6
-    for (s, t), a in zip(pairs, ans):
-        assert bool(a) == dis_reach(fr, s, t).answer
-    print(f"warm-cache batch of {len(pairs)}: {per_q:.0f}us/query "
-          f"(cache built once in {build * 1e3:.0f}ms)")
+    results = session.run(queries)
+    per_q = (time.perf_counter() - t0) / len(queries) * 1e6
+    for q, r in zip(queries, results):
+        if isinstance(q, Reach):
+            assert r.answer == dis_reach(fr, q.s, q.t).answer
+    print(session.last_plan.explain())
+    print(f"warm mixed batch of {len(queries)}: {per_q:.0f}us/query "
+          f"(caches built once in {build * 1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,17 @@
 """Quickstart: the paper's own Figure-1 example as code.
 
 Builds the recommendation network from Fig. 1 (Ann the CTO, Mark the FA,
-DB/HR chains), fragments it across three "data centers", and runs all
-three query classes with the partial-evaluation engine.
+DB/HR chains), fragments it across three "data centers", opens a
+``repro.connect`` session, and answers all three query classes in ONE
+mixed batch — the planner fuses it into one compiled execution per
+(kind, automaton) group.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (build_query_automaton, dis_dist, dis_reach,
-                        dis_rpq, fragment_graph)
+import repro
+from repro.core import Dist, Reach, Rpq, fragment_graph
 from repro.graph.graph import Graph
 
 # --- the paper's Fig. 1 graph ------------------------------------------------
@@ -44,21 +46,21 @@ def main():
 
     s, t = idx["Ann"], idx["Mark"]
 
-    r = dis_reach(fr, s, t)
+    session = repro.connect(fr)        # one handle for all three classes
+    r, d, rr, rr2 = session.run([
+        Reach(s, t),
+        Dist(s, t, bound=6),
+        Rpq(s, t, regex="(DB* | HR*)"),
+        Rpq(s, t, regex="DB*"),
+    ])
+    print(session.last_plan.explain())
+
     print(f"\nq_r(Ann, Mark)        -> {r.answer}   "
           f"(payload {r.stats.payload_bits} bits, "
           f"{r.stats.collective_rounds} collective round)")
-
-    d = dis_dist(fr, s, t, bound=6)
     print(f"q_br(Ann, Mark, 6)    -> {d.answer}   (dist = {d.distance})")
-
-    qa = build_query_automaton("(DB* | HR*)", g.label_of)
-    rr = dis_rpq(fr, s, t, qa)
     print(f"q_rr(Ann, Mark, DB*|HR*) -> {rr.answer}   "
-          f"(|V_q| = {qa.n_states}, payload {rr.stats.payload_bits} bits)")
-
-    qa2 = build_query_automaton("DB*", g.label_of)
-    rr2 = dis_rpq(fr, s, t, qa2)
+          f"(|V_q| = {rr.stats.states}, payload {rr.stats.payload_bits} bits)")
     print(f"q_rr(Ann, Mark, DB*)     -> {rr2.answer}   "
           "(no pure-DB chain exists — paper Ex. 1)")
 

@@ -1,0 +1,26 @@
+"""Distributed reachability queries with performance guarantees
+(JAX/Pallas reproduction of "Performance Guarantees for Distributed
+Reachability Queries", plus a serving stack around it).
+
+The front door is :func:`repro.connect`::
+
+    import repro
+    from repro.core import Reach, Dist, Rpq
+
+    session = repro.connect(fr)                # fr: a Fragmentation
+    results = session.run([
+        Reach(s, t),
+        Dist(s, t, bound=6),
+        Rpq(s, t, regex="(DB* | HR*)"),
+    ])
+
+One session serves all three query classes from shared amortized caches,
+fuses mixed batches into one compiled execution per (kind, automaton)
+group, and keeps everything valid under graph deltas
+(``session.apply(delta)``).  See DESIGN.md Sec. 5.
+"""
+from .core.plan import Dist, Query, QueryResult, Reach, Rpq
+from .core.session import QuerySession, connect
+
+__all__ = ["connect", "QuerySession", "QueryResult",
+           "Reach", "Dist", "Rpq", "Query"]

@@ -1,26 +1,33 @@
 """The paper's primary contribution: distributed (bounded / regular)
 reachability queries via partial evaluation, with performance guarantees.
 
-Beyond the paper (DESIGN.md Sec. 3): an amortized rvset cache splits
+Beyond the paper (DESIGN.md Secs. 3 & 5): an amortized rvset cache splits
 localEval into a once-per-Fragmentation closure phase and a cheap per-query
-phase, with batched multi-query entry points for serving workloads.
+phase, and a :class:`~repro.core.session.QuerySession`
+(``repro.connect(fr)``) plans heterogeneous reach+dist+RPQ batches into
+fused fixed-shape executions — one compiled program per (kind, automaton)
+group.  The ``dis_*`` free functions are shims over default sessions.
 """
 from .api import (QueryResult, dis_dist, dis_dist_batch, dis_dist_cached,
                   dis_reach, dis_reach_batch, dis_reach_cached, dis_rpq,
-                  dis_rpq_cached, dis_rpq_regex)
+                  dis_rpq_batch, dis_rpq_cached, dis_rpq_regex)
 from .automaton import QueryAutomaton, accepts, build_query_automaton
 from .cache import RvsetCache, get_rvset_cache, prepare_rvset_cache
 from .engine import INF, QueryStats
 from .fragments import (DeltaReport, Fragmentation, GraphDelta,
                         fragment_graph, query_slots)
 from .incremental import UpdateStats, apply_delta
+from .plan import Dist, ExecutionGroup, Query, QueryPlan, Reach, Rpq
+from .session import QuerySession, SessionStats, connect
 
 __all__ = [
     "QueryResult", "dis_dist", "dis_reach", "dis_rpq", "dis_rpq_regex",
-    "dis_reach_batch", "dis_dist_batch",
+    "dis_reach_batch", "dis_dist_batch", "dis_rpq_batch",
     "dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
     "RvsetCache", "prepare_rvset_cache", "get_rvset_cache",
     "QueryAutomaton", "accepts", "build_query_automaton",
     "INF", "QueryStats", "Fragmentation", "fragment_graph", "query_slots",
     "GraphDelta", "DeltaReport", "apply_delta", "UpdateStats",
+    "Reach", "Dist", "Rpq", "Query", "QueryPlan", "ExecutionGroup",
+    "QuerySession", "SessionStats", "connect",
 ]

@@ -1,163 +1,73 @@
-"""Public query API: disReach, disDist, disRPQ (paper Figs. 3-7).
+"""Legacy free-function query API, re-expressed as thin shims over
+per-fragmentation default sessions (DESIGN.md Sec. 5).
 
-Single-host evaluation: the fragment axis is vmapped (every fragment's
-localEval runs as one SPMD program — identical math to the shard_map
-multi-device engine in ``distributed.py``, which is used on real meshes).
+The one engine lives behind :func:`repro.connect` /
+:class:`repro.core.session.QuerySession`; these entry points survive for
+callers of the original API:
 
-Answer extraction (coordinator side):
-  * source row  = reserved row B-2 (s), in automaton state u_s for disRPQ;
-  * target cols = reserved col B-1 (t arrivals internal to t's fragment)
-                  plus the alias col b_index[t] when t itself is a boundary
-                  in-node (arrivals via a cross edge landing exactly on t).
+* ``dis_reach`` / ``dis_dist`` / ``dis_rpq`` / ``dis_rpq_regex`` — the
+  paper's one-shot algorithms (Figs. 3-7); they run on the uncached default
+  session (full localEval + evalDG per query, no state left behind).
+* ``dis_*_cached`` / ``dis_*_batch`` — the amortized-cache entry points;
+  they run on the cached default session and emit a
+  ``DeprecationWarning``: new code should hold a session and ``run()``
+  mixed batches instead (repro-internal modules are forbidden from calling
+  them — the test suite escalates their warnings to errors inside
+  ``repro.*``).
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import cache as _cache
-from . import engine
 from .automaton import QueryAutomaton, build_query_automaton
-from .cache import dis_dist_batch, dis_reach_batch
+from .cache import _as_pairs
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, fragment_graph, query_slots
+from .plan import Dist, QueryResult, Reach, Rpq
+from .session import connect, default_session
 
-__all__ = [      # including the batched entry points re-exported from .cache
+__all__ = [
     "QueryResult", "dis_reach", "dis_dist", "dis_rpq", "dis_rpq_regex",
-    "dis_reach_batch", "dis_dist_batch",
+    "dis_reach_batch", "dis_dist_batch", "dis_rpq_batch",
     "dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
-    "QueryAutomaton", "build_query_automaton",
+    "QueryAutomaton", "build_query_automaton", "connect",
     "Fragmentation", "fragment_graph", "query_slots", "INF", "QueryStats",
 ]
 
 
-def _as_jnp(fr: Fragmentation):
-    return {k: jnp.asarray(v) for k, v in fr.arrays.items()}
-
-
-def _tgt_cols(fr: Fragmentation, t: int) -> jnp.ndarray:
-    B = fr.B
-    cols = np.zeros(B, dtype=bool)
-    cols[fr.T_COL] = True
-    bt = fr.b_index[t]
-    if bt >= 0:
-        cols[bt] = True
-    return jnp.asarray(cols)
-
-
-def _src_rows(fr: Fragmentation) -> jnp.ndarray:
-    rows = np.zeros(fr.B, dtype=bool)
-    rows[fr.S_ROW] = True
-    return jnp.asarray(rows)
-
-
-@dataclasses.dataclass
-class QueryResult:
-    answer: bool
-    distance: Optional[int]
-    stats: QueryStats
-    dependency_matrix: Optional[np.ndarray] = None
+def _warn_deprecated(name: str, hint: str) -> None:
+    # stacklevel=3 attributes the warning to whoever called the shim, so
+    # the repro.* -> error filter in pyproject catches internal callers
+    warnings.warn(
+        f"repro.core.{name} is deprecated: open a session with "
+        f"repro.connect(fr) and {hint}", DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
-# disReach (paper Fig. 3)
+# one-shot paths (paper Figs. 3-7): uncached default session
 # ---------------------------------------------------------------------------
 
 def dis_reach(fr: Fragmentation, s: int, t: int,
               return_matrix: bool = False) -> QueryResult:
-    if s == t:
-        return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
-    arrs = _as_jnp(fr)
-    qs = query_slots(fr, s, t)
-    local = jax.vmap(
-        lambda es, ed, sl, sr, tl, sloc, tloc: engine.local_eval_reach(
-            es, ed, sl, sr, tl, sloc, tloc, n_max=fr.n_max, B=fr.B))
-    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
-                  arrs["src_row"], arrs["tgt_local"],
-                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
-    D = jnp.any(rlocs, axis=0)                 # assemble (the one collective)
-    ans = engine.evaldg_reach(D, _src_rows(fr), _tgt_cols(fr, t))
-    stats = QueryStats(payload_bits=fr.packed_traffic_bits(),
-                       collective_rounds=1, boundary=fr.B, states=1)
-    return QueryResult(bool(ans), None, stats,
-                       np.asarray(D) if return_matrix else None)
+    q = Reach(int(s), int(t), return_matrix=return_matrix)
+    return default_session(fr, cache="none").run([q])[0]
 
-
-# ---------------------------------------------------------------------------
-# disDist (paper Sec. 4)
-# ---------------------------------------------------------------------------
 
 def dis_dist(fr: Fragmentation, s: int, t: int,
              bound: Optional[int] = None) -> QueryResult:
     """Bounded reachability q_br(s, t, l); with bound=None returns exact
     dist(s, t) (INF -> unreachable -> distance None)."""
-    if s == t:
-        ok = bound is None or 0 <= bound
-        return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
-    cap = jnp.int32(bound) if bound is not None else INF
-    arrs = _as_jnp(fr)
-    qs = query_slots(fr, s, t)
-    local = jax.vmap(
-        lambda es, ed, sl, sr, tl, sloc, tloc: engine.local_eval_dist(
-            es, ed, sl, sr, tl, sloc, tloc, cap, n_max=fr.n_max, B=fr.B))
-    wlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
-                  arrs["src_row"], arrs["tgt_local"],
-                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
-    W = jnp.min(wlocs, axis=0)
-    d = engine.evaldg_dist(W, _src_rows(fr), _tgt_cols(fr, t))
-    d = int(d)
-    reachable = d < int(INF)
-    answer = reachable if bound is None else (reachable and d <= bound)
-    stats = QueryStats(payload_bits=fr.B * fr.B * 32, collective_rounds=1,
-                       boundary=fr.B, states=1)
-    # a failed bounded query reports no distance: with the propagation
-    # capped at the bound, d is not the true distance past it (local
-    # segments longer than the cap were pruned), so don't surface it
-    return QueryResult(answer, d if (reachable and answer) else None, stats)
+    q = Dist(int(s), int(t), bound=bound)
+    return default_session(fr, cache="none").run([q])[0]
 
-
-# ---------------------------------------------------------------------------
-# disRPQ (paper Sec. 5)
-# ---------------------------------------------------------------------------
 
 def dis_rpq(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton,
             return_matrix: bool = False) -> QueryResult:
-    if s == t:
-        return QueryResult(bool(qa.nullable), 0,
-                           QueryStats(0, 0, fr.B, qa.n_states))
-    Q = qa.n_states
-    arrs = _as_jnp(fr)
-    qs = query_slots(fr, s, t)
-    q_labels = jnp.asarray(qa.state_labels)
-    q_trans = jnp.asarray(qa.trans)
-    local = jax.vmap(
-        lambda es, ed, sl, sr, tl, lab, gid, sloc, tloc:
-        engine.local_eval_regular(es, ed, sl, sr, tl, lab, gid,
-                                  q_labels, q_trans, sloc, tloc,
-                                  jnp.int32(s), jnp.int32(t),
-                                  n_max=fr.n_max, B=fr.B))
-    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
-                  arrs["src_row"], arrs["tgt_local"], arrs["labels"],
-                  arrs["gids"],
-                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
-    D = jnp.any(rlocs, axis=0)                  # [(B*Q), (B*Q)]
-
-    src_rows = np.zeros(fr.B * Q, dtype=bool)
-    src_rows[fr.S_ROW * Q + qa.start] = True
-    tgt_cols = np.zeros(fr.B * Q, dtype=bool)
-    tgt_cols[fr.T_COL * Q + qa.final] = True
-    bt = fr.b_index[t]
-    if bt >= 0:
-        tgt_cols[bt * Q + qa.final] = True
-    ans = engine.evaldg_reach(D, jnp.asarray(src_rows), jnp.asarray(tgt_cols))
-    stats = QueryStats(payload_bits=fr.packed_traffic_bits(states=Q),
-                       collective_rounds=1, boundary=fr.B, states=Q)
-    return QueryResult(bool(ans), None, stats,
-                       np.asarray(D) if return_matrix else None)
+    q = Rpq(int(s), int(t), automaton=qa, return_matrix=return_matrix)
+    return default_session(fr, cache="none").run([q])[0]
 
 
 def dis_rpq_regex(fr: Fragmentation, s: int, t: int, regex: str,
@@ -171,44 +81,57 @@ def dis_rpq_regex(fr: Fragmentation, s: int, t: int, regex: str,
 
 
 # ---------------------------------------------------------------------------
-# amortized-cache paths (core.cache): same answers, repeated queries cheap
+# amortized-cache paths: cached default session (deprecated shims)
 # ---------------------------------------------------------------------------
 
 def dis_reach_cached(fr: Fragmentation, s: int, t: int) -> QueryResult:
-    """disReach against the rvset cache (built on first use).  The warm
-    per-query cost is one single-source propagation + one or-and
-    vector-matrix product instead of a full localEval."""
-    if s == t:
-        return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
-    ans = _cache.reach_cached(fr, s, t)
-    stats = QueryStats(payload_bits=fr.packed_traffic_bits(),
-                       collective_rounds=1, boundary=fr.B, states=1)
-    return QueryResult(bool(ans), None, stats)
+    """disReach against the rvset cache (built on first use)."""
+    _warn_deprecated("dis_reach_cached", "run([Reach(s, t)])")
+    return default_session(fr).run([Reach(int(s), int(t))])[0]
 
 
 def dis_dist_cached(fr: Fragmentation, s: int, t: int,
                     bound: Optional[int] = None) -> QueryResult:
-    if s == t:
-        ok = bound is None or 0 <= bound
-        return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
-    d = _cache.dist_cached(fr, s, t)
-    reachable = d is not None
-    answer = reachable if bound is None else (reachable and d <= bound)
-    # match the seed path: a bounded query that fails reports no distance
-    # (dis_dist caps propagation at the bound, so it never sees the value)
-    if bound is not None and not answer:
-        d = None
-    stats = QueryStats(payload_bits=fr.B * fr.B * 32, collective_rounds=1,
-                       boundary=fr.B, states=1)
-    return QueryResult(answer, d, stats)
+    _warn_deprecated("dis_dist_cached", "run([Dist(s, t, bound)])")
+    return default_session(fr).run([Dist(int(s), int(t), bound=bound)])[0]
 
 
 def dis_rpq_cached(fr: Fragmentation, s: int, t: int,
                    qa: QueryAutomaton) -> QueryResult:
-    if s == t:
-        return QueryResult(bool(qa.nullable), 0,
-                           QueryStats(0, 0, fr.B, qa.n_states))
-    ans = _cache.rpq_cached(fr, s, t, qa)
-    stats = QueryStats(payload_bits=fr.packed_traffic_bits(states=qa.n_states),
-                       collective_rounds=1, boundary=fr.B, states=qa.n_states)
-    return QueryResult(bool(ans), None, stats)
+    _warn_deprecated("dis_rpq_cached", "run([Rpq(s, t, automaton=qa)])")
+    return default_session(fr).run([Rpq(int(s), int(t), automaton=qa)])[0]
+
+
+def dis_reach_batch(fr: Fragmentation, pairs) -> np.ndarray:
+    """Answer N (s, t) reachability queries in one fused execution.
+    Returns [N] bool."""
+    _warn_deprecated("dis_reach_batch", "run([Reach(s, t), ...])")
+    qs = [Reach(int(s), int(t)) for s, t in _as_pairs(pairs)]
+    res = default_session(fr).run(qs)
+    return np.array([r.answer for r in res], dtype=bool)
+
+
+def dis_dist_batch(fr: Fragmentation, pairs,
+                   bound: Optional[int] = None) -> np.ndarray:
+    """N shortest distances (or bounded-reachability answers when ``bound``
+    is given: dist <= bound).  Returns [N] int64 distances with -1 for
+    unreachable, or [N] bool when ``bound`` is not None."""
+    _warn_deprecated("dis_dist_batch", "run([Dist(s, t, bound), ...])")
+    qs = [Dist(int(s), int(t)) for s, t in _as_pairs(pairs)]
+    if not qs:
+        return np.zeros(0, dtype=bool if bound is not None else np.int64)
+    res = default_session(fr).run(qs)
+    d = np.array([-1 if r.distance is None else r.distance for r in res],
+                 dtype=np.int64)
+    if bound is not None:
+        return (d >= 0) & (d <= bound)
+    return d
+
+
+def dis_rpq_batch(fr: Fragmentation, pairs, qa: QueryAutomaton) -> np.ndarray:
+    """N regular path queries for one automaton in one fused execution.
+    Returns [N] bool."""
+    _warn_deprecated("dis_rpq_batch", "run([Rpq(s, t, automaton=qa), ...])")
+    qs = [Rpq(int(s), int(t), automaton=qa) for s, t in _as_pairs(pairs)]
+    res = default_session(fr).run(qs)
+    return np.array([r.answer for r in res], dtype=bool)

@@ -40,6 +40,14 @@ class QueryAutomaton:
         """|R| proxy used in the complexity bounds: states + transitions."""
         return self.n_states + int(self.trans.sum())
 
+    def cache_key(self) -> tuple:
+        """Hashable identity used to key per-automaton cached artifacts
+        (product closures in core.cache, execution groups in core.plan):
+        two automata with equal keys are behaviourally identical —
+        ``nullable`` is included because it decides s == t answers."""
+        return (self.n_states, self.start, self.nullable,
+                self.state_labels.tobytes(), self.trans.tobytes())
+
 
 # --- regex AST -------------------------------------------------------------
 

@@ -265,8 +265,7 @@ def dist_cached(fr: Fragmentation, s: int, t: int) -> Optional[int]:
 # ---------------------------------------------------------------------------
 
 def _qa_key(qa: QueryAutomaton) -> Tuple:
-    return (qa.n_states, qa.start, qa.state_labels.tobytes(),
-            qa.trans.tobytes())
+    return qa.cache_key()
 
 
 def product_closure(fr: Fragmentation, qa: QueryAutomaton,
@@ -308,44 +307,82 @@ def product_closure(fr: Fragmentation, qa: QueryAutomaton,
     return C
 
 
-def rpq_cached(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton) -> bool:
-    """Cached disRPQ: per-automaton product closure (amortized) + one
-    forward and k reverse product propagations per query."""
-    if s == t:
-        return bool(qa.nullable)
+@functools.partial(jax.jit, static_argnames=("n_max",))
+def _batch_rpq_kernel(esrc, edst, labels, gids, tgt_local, q_labels, q_trans,
+                      q_start, C, part_b, local_b, frag_s, s_slot,
+                      t_slot_sfrag, t_slots, s_gids, t_gids, *, n_max: int):
+    """N pairs -> N answers for ONE automaton against its cached product
+    closure.  Shapes: esrc/edst/labels/gids [k, ...]; tgt_local [k, B];
+    C [(nb*Q), (nb*Q)]; part_b/local_b [nb]; frag_s/s_slot/t_slot_sfrag/
+    s_gids/t_gids [N]; t_slots [N, k] (slot of t_j in every fragment).
+
+    Per pair: one forward product propagation from (s, u_s) on s's fragment
+    and k reverse product propagations to (t, u_t) (one per fragment — the
+    t-column), both vmapped over the batch; then ONE or-and matmul
+    [N, nb*Q] x [(nb*Q), (nb*Q)] composes them through the closure.
+    """
+    Q = q_labels.shape[0]
+    nb = part_b.shape[0]
+    es = jnp.take(esrc, frag_s, axis=0)                    # [N, E]
+    ed = jnp.take(edst, frag_s, axis=0)
+    lab = jnp.take(labels, frag_s, axis=0)
+    gid = jnp.take(gids, frag_s, axis=0)
+    f = jax.vmap(lambda a, b, c, d, sl, sg, tg: engine.single_source_regular(
+        a, b, c, d, q_labels, q_trans, sl, q_start, sg, tg,
+        n_max=n_max))(es, ed, lab, gid, s_slot, s_gids, t_gids)  # [N,n+1,Q]
+    direct = jnp.take_along_axis(f[:, :, Q - 1], t_slot_sfrag[:, None],
+                                 axis=1)[:, 0]             # [N]
+    rev = jax.vmap(lambda ts, sg, tg: jax.vmap(
+        lambda a, b, c, d, tslot: engine.reverse_target_regular(
+            a, b, c, d, q_labels, q_trans, tslot, sg, tg,
+            n_max=n_max))(esrc, edst, labels, gids, ts))(
+        t_slots, s_gids, t_gids)                           # [N, k, n+1, Q]
+    if nb == 0:
+        return direct
+    tgt_s = jnp.take(tgt_local, frag_s, axis=0)[:, :nb]    # [N, nb]
+    sb = jnp.take_along_axis(f, tgt_s[:, :, None], axis=1)  # [N, nb, Q]
+    # spare boundary slots read the (all-false) pad row of rev via local_b
+    tc = rev[:, part_b, local_b, :]                        # [N, nb, Q]
+    from ..kernels.bool_matmul.ops import or_and_matmul
+    N = f.shape[0]
+    sbc = or_and_matmul(sb.reshape(N, nb * Q), C)          # [N, nb*Q]
+    return direct | jnp.any(sbc & tc.reshape(N, nb * Q), axis=1)
+
+
+def dis_rpq_batch(fr: Fragmentation, pairs, qa: QueryAutomaton) -> np.ndarray:
+    """Answer N (s, t) regular path queries for one automaton in one jitted
+    call against the cached product closure.  Returns [N] bool.
+
+    One compiled program per (automaton, batch-shape) pair — the session
+    planner pads batch sizes to buckets, so a mixed workload with R
+    distinct automata steady-states at R compiled executions per batch.
+    """
+    pairs = _as_pairs(pairs)
+    if len(pairs) == 0:
+        return np.zeros(0, dtype=bool)
     C = product_closure(fr, qa)
     cache = get_rvset_cache(fr)
     arrs = cache.arrays
-    q_labels = jnp.asarray(qa.state_labels)
-    q_trans = jnp.asarray(qa.trans)
-    Q = qa.n_states
-    nb, n_max = fr.n_boundary, fr.n_max
+    ss, tt = pairs[:, 0], pairs[:, 1]
     slot_of = fr.slot_index()
-    fs = int(fr.part[s])
-
-    # forward: (s, u_s) within s's fragment
-    f = engine.single_source_regular(
-        arrs["esrc"][fs], arrs["edst"][fs], arrs["labels"][fs],
-        arrs["gids"][fs], q_labels, q_trans,
-        jnp.int32(fr.owner_local[s]), jnp.int32(qa.start),
-        jnp.int32(s), jnp.int32(t), n_max=n_max)            # [n+1, Q]
-    direct = f[int(slot_of[t, fs]), Q - 1]
-
-    # reverse: to (t, u_t) within every fragment (covers the t column)
-    t_slots = jnp.asarray(slot_of[t, :])                    # [k]
-    rev = jax.vmap(
-        lambda es, ed, lab, gid, tslot: engine.reverse_target_regular(
-            es, ed, lab, gid, q_labels, q_trans, tslot,
-            jnp.int32(s), jnp.int32(t), n_max=n_max))(
+    frag_s = fr.part[ss].astype(np.int32)
+    out = _batch_rpq_kernel(
         arrs["esrc"], arrs["edst"], arrs["labels"], arrs["gids"],
-        t_slots)                                            # [k, n+1, Q]
+        arrs["tgt_local"], jnp.asarray(qa.state_labels),
+        jnp.asarray(qa.trans), jnp.int32(qa.start), C,
+        jnp.asarray(cache.part_b), jnp.asarray(fr.boundary_local()),
+        jnp.asarray(frag_s), jnp.asarray(fr.owner_local[ss].astype(np.int32)),
+        jnp.asarray(slot_of[tt, frag_s]), jnp.asarray(slot_of[tt, :]),
+        jnp.asarray(ss.astype(np.int32)), jnp.asarray(tt.astype(np.int32)),
+        n_max=fr.n_max)
+    ans = np.array(out)                    # copy: jax buffers are read-only
+    ans[ss == tt] = bool(qa.nullable)      # convention: s==t is |R|-free
+    return ans
 
-    if nb == 0:
-        return bool(direct)
-    sb = f[jnp.asarray(fr.arrays["tgt_local"][fs, :nb])]    # [nb, Q]
-    local_b = fr.boundary_local()     # spare slots -> pad row (all-false)
-    tc = rev[jnp.asarray(cache.part_b), jnp.asarray(local_b), :]  # [nb, Q]
-    from ..kernels.bool_matmul.ops import or_and_matmul
-    sbc = or_and_matmul(sb.reshape(1, nb * Q), C)[0]
-    ans = direct | jnp.any(sbc & tc.reshape(nb * Q))
-    return bool(ans)
+
+def rpq_cached(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton) -> bool:
+    """Cached disRPQ (batch of one): per-automaton product closure
+    (amortized) + one forward and k reverse product propagations."""
+    if s == t:
+        return bool(qa.nullable)
+    return bool(dis_rpq_batch(fr, [(s, t)], qa)[0])

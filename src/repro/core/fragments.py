@@ -198,6 +198,24 @@ class Fragmentation:
         side = self.B * states
         return packed_bits(side, side)
 
+    def traffic_bits(self, kind: str = "reach", states: int = 1) -> int:
+        """Wire size of the ONE collective for a single query of ``kind``
+        (DESIGN.md Sec. 4).  All query classes route through here so
+        ``QueryStats.payload_bits`` stays consistent across kinds:
+
+        * ``reach`` / ``rpq``: Boolean payload, bitpacked into uint32 words
+          — ``side * ceil(side/32) * 32`` bits with ``side = B * states``;
+        * ``dist`` / ``bounded``: tropical payload — int32 distances do not
+          bitpack, so the wire carries the full ``side * side * 32`` bits.
+        """
+        if kind in ("reach", "rpq"):
+            return self.packed_traffic_bits(states=states)
+        if kind in ("dist", "bounded"):
+            side = self.B * states
+            return side * side * 32
+        raise ValueError(f"unknown query kind {kind!r}; expected one of "
+                         "('reach', 'dist', 'bounded', 'rpq')")
+
     def largest_fragment(self) -> int:
         return int(self.frag_sizes.max())
 

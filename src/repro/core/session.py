@@ -1,0 +1,389 @@
+"""QuerySession: one handle over a (dynamic) fragmentation for all three
+query classes (DESIGN.md Sec. 5).
+
+``repro.connect(fr)`` opens a session that owns the amortized caches
+(rvset / tropical / per-automaton product closures, physically attached to
+the Fragmentation so every view of it shares one copy), the backend choice
+(single-host ``vmap`` vs one-fragment-per-device ``shard_map``), snapshot
+version stamping, and delta application.  ``session.run([...])`` takes a
+heterogeneous batch of :mod:`repro.core.plan` IR values, groups it by
+(kind, automaton) through the planner, and serves every group with ONE
+compiled batched execution — reach and dist through the PR-2 kernels, RPQs
+through the batched product-closure path — returning
+:class:`~repro.core.plan.QueryResult`\\ s in submission order.
+
+The legacy free functions (``dis_reach``, ``dis_reach_cached``, ...) are
+thin shims over per-fragmentation default sessions (see ``core.api``);
+everything inside ``src/repro`` talks to the session directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cache as _cache
+from . import engine, incremental
+from .automaton import QueryAutomaton, build_query_automaton
+from .engine import INF, QueryStats
+from .fragments import Fragmentation, GraphDelta, query_slots
+from .plan import (Dist, ExecutionGroup, Query, QueryPlan, QueryResult,
+                   Reach, Rpq, plan_queries)
+
+BACKENDS = ("auto", "vmap", "shard_map")
+CACHE_MODES = ("amortized", "none")
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Work accounting across the session's lifetime."""
+
+    queries: int = 0         # queries answered
+    batches: int = 0         # run() calls
+    executions: int = 0      # compiled-program invocations issued
+    updates: int = 0         # deltas applied
+
+
+def connect(fr: Fragmentation, backend: str = "auto",
+            cache: str = "amortized", mesh=None) -> "QuerySession":
+    """Open a :class:`QuerySession` over ``fr``.
+
+    ``backend``: ``"vmap"`` runs every fragment's localEval as one SPMD
+    program on the host; ``"shard_map"`` places one fragment per device of
+    ``mesh`` (built lazily when omitted) and keeps the one-collective
+    guarantee per fused batch; ``"auto"`` picks shard_map iff enough
+    devices exist for ``fr.k``.  ``cache``: ``"amortized"`` serves batches
+    from the rvset/product caches (built lazily, shared with every other
+    session on the same fragmentation); ``"none"`` evaluates each query
+    with the seed one-shot engine and never builds cache state.
+    """
+    return QuerySession(fr, backend=backend, cache=cache, mesh=mesh)
+
+
+class QuerySession:
+    """Unified query interface over one fragmentation (see :func:`connect`)."""
+
+    def __init__(self, fr: Fragmentation, backend: str = "auto",
+                 cache: str = "amortized", mesh=None):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of "
+                             f"{BACKENDS}")
+        if cache not in CACHE_MODES:
+            raise ValueError(f"unknown cache mode {cache!r}; expected one "
+                             f"of {CACHE_MODES}")
+        self.fr = fr
+        self.cache_mode = cache
+        self._mesh = mesh
+        if backend == "auto":
+            backend = ("shard_map"
+                       if fr.k > 1 and len(jax.devices()) >= fr.k else "vmap")
+        elif backend == "shard_map" and mesh is None \
+                and len(jax.devices()) < fr.k:
+            raise ValueError(
+                f"backend='shard_map' needs >= {fr.k} devices for "
+                f"{fr.k} fragments, have {len(jax.devices())}; use "
+                "backend='auto' to fall back to vmap")
+        self.backend = backend
+        self.stats = SessionStats()
+        self.last_plan: Optional[QueryPlan] = None
+        self._regex_cache: Dict[str, QueryAutomaton] = {}
+
+    # -- cache lifecycle ---------------------------------------------------
+
+    def warm(self, with_dist: bool = False) -> "QuerySession":
+        """Eagerly build the amortized caches (no-op for cache='none')."""
+        if self.cache_mode == "amortized":
+            _cache.prepare_rvset_cache(self.fr, with_dist=with_dist)
+        return self
+
+    @property
+    def cache_version(self) -> Optional[int]:
+        """Snapshot id of the attached rvset cache (None before first
+        build or for uncached sessions); bumped by every delta repair."""
+        c = self.fr.rvset_cache
+        return None if c is None else c.version
+
+    # -- dynamic graphs ----------------------------------------------------
+
+    def apply(self, delta: GraphDelta) -> incremental.UpdateStats:
+        """Apply a :class:`GraphDelta` and repair the session's caches in
+        place (DESIGN.md Sec. 3.5).  On the shard_map backend the repair
+        collective ships only the changed bitpacked rows; otherwise (and
+        for the cases the sharded path does not cover) the host repair
+        runs.  Queries run after this see the new snapshot
+        (``cache_version`` is bumped)."""
+        self.stats.updates += 1
+        if self.backend == "shard_map" and self.fr.rvset_cache is not None:
+            from . import distributed
+            return distributed.apply_delta_sharded(self.fr, delta,
+                                                   mesh=self._mesh)
+        return incremental.apply_delta(self.fr, delta)
+
+    # -- query execution ---------------------------------------------------
+
+    def run(self, queries: Union[Query, Sequence[Query]],
+            ) -> List[QueryResult]:
+        """Answer a heterogeneous batch; results in submission order.
+
+        The batch is grouped by (kind, automaton) and each group is served
+        by one compiled batched execution (``cache='amortized'``) or by
+        per-query seed evaluations (``cache='none'``).  Every result is
+        stamped with the cache snapshot it was computed against.
+        """
+        if isinstance(queries, (Reach, Dist, Rpq)):
+            queries = [queries]
+        queries = list(queries)
+        plan = plan_queries(queries, self._resolve_automaton)
+        self.last_plan = plan
+        results: List[Optional[QueryResult]] = [None] * len(queries)
+        for group in plan.groups:
+            if self.cache_mode == "amortized":
+                self._run_group_cached(group, results)
+            else:
+                self._run_group_uncached(group, results)
+        # uncached execution never consults the cache: stamp None even if a
+        # cache happens to exist on the shared fragmentation
+        version = (self.cache_version if self.cache_mode == "amortized"
+                   else None)
+        for r in results:
+            r.cache_version = version
+        self.stats.queries += len(queries)
+        self.stats.batches += 1
+        return results  # type: ignore[return-value]
+
+    # convenience single-query sugar (examples / interactive use)
+    def reach(self, s: int, t: int) -> bool:
+        return self.run(Reach(int(s), int(t)))[0].answer
+
+    def dist(self, s: int, t: int,
+             bound: Optional[int] = None) -> QueryResult:
+        return self.run(Dist(int(s), int(t), bound=bound))[0]
+
+    def rpq(self, s: int, t: int, regex: Optional[str] = None,
+            automaton: Optional[QueryAutomaton] = None) -> bool:
+        return self.run(Rpq(int(s), int(t), regex=regex,
+                            automaton=automaton))[0].answer
+
+    # -- internals ---------------------------------------------------------
+
+    def _resolve_automaton(self, q: Rpq) -> QueryAutomaton:
+        if q.automaton is not None:
+            return q.automaton
+        qa = self._regex_cache.get(q.regex)
+        if qa is None:
+            g = self.fr.g
+            label_of = (g.label_of if g.label_names is not None
+                        else (lambda name: int(name)))
+            qa = build_query_automaton(q.regex, label_of)
+            self._regex_cache[q.regex] = qa
+        return qa
+
+    def _run_group_cached(self, group: ExecutionGroup, results) -> None:
+        """One compiled batched execution for the whole group (padded to
+        the group's bucket size; pad answers are discarded)."""
+        fr = self.fr
+        pairs = group.pairs()
+        if group.kind == "reach":
+            if self.backend == "shard_map":
+                from . import distributed
+                ans = distributed.dis_reach_batch_sharded(fr, pairs,
+                                                          mesh=self._mesh)
+            else:
+                ans = _cache.dis_reach_batch(fr, pairs)
+            for i, q, a in zip(group.indices, group.queries, ans):
+                results[i] = self._reach_result(q, a)
+        elif group.kind == "dist":
+            # exact distances once; each query's bound applies at answer
+            # extraction (this is what lets bounded + exact queries fuse).
+            # the tropical cache is host-resident on every backend.
+            d = _cache.dis_dist_batch(fr, pairs)
+            for i, q, di in zip(group.indices, group.queries, d):
+                results[i] = self._dist_result(q, int(di))
+        else:                                   # rpq
+            ans = _cache.dis_rpq_batch(fr, pairs, group.automaton)
+            for i, q, a in zip(group.indices, group.queries, ans):
+                results[i] = self._rpq_result(q, group.automaton, a)
+        self.stats.executions += 1
+
+    def _run_group_uncached(self, group: ExecutionGroup, results) -> None:
+        """Seed one-shot engine, one evaluation per query (cache='none')."""
+        fr = self.fr
+        for i, q in zip(group.indices, group.queries):
+            if group.kind == "reach":
+                results[i] = exec_reach(fr, q.s, q.t,
+                                        return_matrix=q.return_matrix)
+            elif group.kind == "dist":
+                results[i] = exec_dist(fr, q.s, q.t, bound=q.bound)
+            else:
+                results[i] = exec_rpq(fr, q.s, q.t, group.automaton,
+                                      return_matrix=q.return_matrix)
+            self.stats.executions += 1
+
+    def _reach_result(self, q: Reach, ans) -> QueryResult:
+        fr = self.fr
+        if q.s == q.t:
+            return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
+        return QueryResult(bool(ans), None,
+                           QueryStats(fr.traffic_bits("reach"), 1, fr.B, 1))
+
+    def _dist_result(self, q: Dist, d: int) -> QueryResult:
+        fr = self.fr
+        if q.s == q.t:
+            ok = q.bound is None or 0 <= q.bound
+            return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
+        dist: Optional[int] = None if d < 0 else d
+        reachable = dist is not None
+        answer = (reachable if q.bound is None
+                  else (reachable and dist <= q.bound))
+        # match the seed path: a failed bounded query reports no distance
+        if q.bound is not None and not answer:
+            dist = None
+        return QueryResult(answer, dist,
+                           QueryStats(fr.traffic_bits("dist"), 1, fr.B, 1))
+
+    def _rpq_result(self, q: Rpq, qa: QueryAutomaton, ans) -> QueryResult:
+        fr = self.fr
+        if q.s == q.t:
+            return QueryResult(bool(qa.nullable), 0,
+                               QueryStats(0, 0, fr.B, qa.n_states))
+        return QueryResult(
+            bool(ans), None,
+            QueryStats(fr.traffic_bits("rpq", states=qa.n_states), 1, fr.B,
+                       qa.n_states))
+
+
+# ---------------------------------------------------------------------------
+# per-fragmentation default sessions (what the core.api shims delegate to)
+# ---------------------------------------------------------------------------
+
+def default_session(fr: Fragmentation,
+                    cache: str = "amortized") -> QuerySession:
+    """Memoized vmap-backend session attached to ``fr`` (one per cache
+    mode).  Cache state lives on the fragmentation itself, so default
+    sessions and explicitly connected ones always share it."""
+    key = "_default_session_" + cache
+    sess = fr.__dict__.get(key)
+    if sess is None:
+        sess = QuerySession(fr, backend="vmap", cache=cache)
+        fr.__dict__[key] = sess
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# seed one-shot engine (paper Figs. 3-7): full localEval + evalDG per query
+# ---------------------------------------------------------------------------
+#
+# Answer extraction (coordinator side):
+#   * source row  = reserved row B-2 (s), in automaton state u_s for RPQs;
+#   * target cols = reserved col B-1 (t arrivals internal to t's fragment)
+#     plus the alias col b_index[t] when t itself is a boundary in-node
+#     (arrivals via a cross edge landing exactly on t).
+
+def _as_jnp(fr: Fragmentation):
+    return {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+
+
+def _tgt_cols(fr: Fragmentation, t: int) -> jnp.ndarray:
+    B = fr.B
+    cols = np.zeros(B, dtype=bool)
+    cols[fr.T_COL] = True
+    bt = fr.b_index[t]
+    if bt >= 0:
+        cols[bt] = True
+    return jnp.asarray(cols)
+
+
+def _src_rows(fr: Fragmentation) -> jnp.ndarray:
+    rows = np.zeros(fr.B, dtype=bool)
+    rows[fr.S_ROW] = True
+    return jnp.asarray(rows)
+
+
+def exec_reach(fr: Fragmentation, s: int, t: int,
+               return_matrix: bool = False) -> QueryResult:
+    """disReach (paper Fig. 3): vmapped localEval + one assemble + evalDG."""
+    if s == t:
+        return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
+    arrs = _as_jnp(fr)
+    qs = query_slots(fr, s, t)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, sloc, tloc: engine.local_eval_reach(
+            es, ed, sl, sr, tl, sloc, tloc, n_max=fr.n_max, B=fr.B))
+    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"],
+                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
+    D = jnp.any(rlocs, axis=0)                 # assemble (the one collective)
+    ans = engine.evaldg_reach(D, _src_rows(fr), _tgt_cols(fr, t))
+    stats = QueryStats(payload_bits=fr.traffic_bits("reach"),
+                       collective_rounds=1, boundary=fr.B, states=1)
+    return QueryResult(bool(ans), None, stats,
+                       np.asarray(D) if return_matrix else None)
+
+
+def exec_dist(fr: Fragmentation, s: int, t: int,
+              bound: Optional[int] = None) -> QueryResult:
+    """disDist (paper Sec. 4): bounded reachability q_br(s, t, l); with
+    bound=None returns exact dist(s, t) (INF -> unreachable -> None)."""
+    if s == t:
+        ok = bound is None or 0 <= bound
+        return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
+    cap = jnp.int32(bound) if bound is not None else INF
+    arrs = _as_jnp(fr)
+    qs = query_slots(fr, s, t)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, sloc, tloc: engine.local_eval_dist(
+            es, ed, sl, sr, tl, sloc, tloc, cap, n_max=fr.n_max, B=fr.B))
+    wlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"],
+                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
+    W = jnp.min(wlocs, axis=0)
+    d = engine.evaldg_dist(W, _src_rows(fr), _tgt_cols(fr, t))
+    d = int(d)
+    reachable = d < int(INF)
+    answer = reachable if bound is None else (reachable and d <= bound)
+    stats = QueryStats(payload_bits=fr.traffic_bits("dist"),
+                       collective_rounds=1, boundary=fr.B, states=1)
+    # a failed bounded query reports no distance: with the propagation
+    # capped at the bound, d is not the true distance past it (local
+    # segments longer than the cap were pruned), so don't surface it
+    return QueryResult(answer, d if (reachable and answer) else None, stats)
+
+
+def exec_rpq(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton,
+             return_matrix: bool = False) -> QueryResult:
+    """disRPQ (paper Sec. 5): product-automaton localEval_r + evalDG_r."""
+    if s == t:
+        return QueryResult(bool(qa.nullable), 0,
+                           QueryStats(0, 0, fr.B, qa.n_states))
+    Q = qa.n_states
+    arrs = _as_jnp(fr)
+    qs = query_slots(fr, s, t)
+    q_labels = jnp.asarray(qa.state_labels)
+    q_trans = jnp.asarray(qa.trans)
+    local = jax.vmap(
+        lambda es, ed, sl, sr, tl, lab, gid, sloc, tloc:
+        engine.local_eval_regular(es, ed, sl, sr, tl, lab, gid,
+                                  q_labels, q_trans, sloc, tloc,
+                                  jnp.int32(s), jnp.int32(t),
+                                  n_max=fr.n_max, B=fr.B))
+    rlocs = local(arrs["esrc"], arrs["edst"], arrs["src_local"],
+                  arrs["src_row"], arrs["tgt_local"], arrs["labels"],
+                  arrs["gids"],
+                  jnp.asarray(qs["s_local"]), jnp.asarray(qs["t_local"]))
+    D = jnp.any(rlocs, axis=0)                  # [(B*Q), (B*Q)]
+
+    src_rows = np.zeros(fr.B * Q, dtype=bool)
+    src_rows[fr.S_ROW * Q + qa.start] = True
+    tgt_cols = np.zeros(fr.B * Q, dtype=bool)
+    tgt_cols[fr.T_COL * Q + qa.final] = True
+    bt = fr.b_index[t]
+    if bt >= 0:
+        tgt_cols[bt * Q + qa.final] = True
+    ans = engine.evaldg_reach(D, jnp.asarray(src_rows), jnp.asarray(tgt_cols))
+    stats = QueryStats(payload_bits=fr.traffic_bits("rpq", states=Q),
+                       collective_rounds=1, boundary=fr.B, states=Q)
+    return QueryResult(bool(ans), None, stats,
+                       np.asarray(D) if return_matrix else None)

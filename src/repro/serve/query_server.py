@@ -1,10 +1,12 @@
-"""Batched reachability-query serving loop (DESIGN.md Sec. 3.4-3.5).
+"""Batched query-serving loop over a QuerySession (DESIGN.md Secs. 3.4 & 5).
 
 Mirrors the LM ``ServeEngine`` slots model for graph queries: requests
-accumulate in a queue and are drained in fixed-size batches through ONE
-jitted ``dis_reach_batch`` / ``dis_dist_batch`` call each (fixed batch
-shape == one compiled program; short batches are padded with a repeat of
-the last request, so the engine never retraces under bursty traffic).
+accumulate in a queue and are drained in bounded-size chunks, each served
+by ONE ``session.run`` mixed batch — the session's planner fuses every
+chunk into one compiled execution per (kind, automaton) group, with batch
+sizes padded to buckets so the engine never retraces under bursty traffic.
+All three query classes are served, including regular path queries
+(``kind="rpq"`` with a regex or a prebuilt automaton).
 
 Dynamic graphs: ``submit_delta`` enqueues a :class:`GraphDelta` *into the
 same queue*, so updates and queries interleave in submission order with
@@ -12,9 +14,10 @@ snapshot consistency — every query submitted before an update is answered
 against the pre-delta cache (the drain loop flushes pending query batches
 before applying an update; a batch never spans an update boundary), and
 every query submitted after it sees the incrementally repaired cache.
+Answers are stamped with the ``cache_version`` they were computed against.
 
 The first ``submit``/``drain`` against a fresh Fragmentation pays the
-amortized rvset-cache build; every batch after that is the cheap per-query
+amortized cache build; every batch after that is the cheap per-query
 phase only, and updates cost an incremental repair instead of a rebuild.
 """
 from __future__ import annotations
@@ -22,22 +25,36 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple, Union
 
-import numpy as np
-
-from ..core.cache import dis_dist_batch, dis_reach_batch, prepare_rvset_cache
+from ..core.automaton import QueryAutomaton
 from ..core.fragments import Fragmentation, GraphDelta
-from ..core.incremental import UpdateStats, apply_delta
+from ..core.incremental import UpdateStats
+from ..core.plan import Dist, Query, Reach, Rpq
+from ..core.session import QuerySession, connect
+
+VALID_KINDS = ("reach", "dist", "bounded", "rpq")
 
 
 @dataclasses.dataclass
 class QueryRequest:
     s: int
     t: int
-    kind: str = "reach"              # "reach" | "dist" | "bounded"
-    bound: Optional[int] = None
+    kind: str = "reach"              # one of VALID_KINDS
+    bound: Optional[int] = None      # bounded queries only
+    regex: Optional[str] = None      # rpq only (exactly one of regex /
+    automaton: Optional[QueryAutomaton] = None     # automaton)
     result: object = None            # bool / int-or-None once served
     # rvset-cache version the answer was computed against (snapshot id)
     cache_version: Optional[int] = None
+
+    def to_query(self) -> Query:
+        if self.kind == "reach":
+            return Reach(self.s, self.t)
+        if self.kind == "dist":
+            return Dist(self.s, self.t)
+        if self.kind == "bounded":
+            return Dist(self.s, self.t, bound=self.bound)
+        return Rpq(self.s, self.t, regex=self.regex,
+                   automaton=self.automaton)
 
 
 @dataclasses.dataclass
@@ -47,31 +64,48 @@ class UpdateRequest:
 
 
 class QueryServer:
-    """Fixed-batch continuous server over one (dynamic) Fragmentation."""
+    """Bounded-batch continuous server over one (dynamic) Fragmentation."""
 
     def __init__(self, fr: Fragmentation, batch_size: int = 64,
-                 warm: bool = True, with_dist: bool = False):
-        """``with_dist=True`` eagerly builds the tropical cache too;
-        the default leaves it to build lazily on the first dist/bounded
-        query, so reach-only servers never pay for it."""
+                 warm: bool = True, with_dist: bool = False,
+                 backend: str = "auto",
+                 session: Optional[QuerySession] = None):
+        """``with_dist=True`` eagerly builds the tropical cache too; the
+        default leaves it to build lazily on the first dist/bounded query,
+        so reach-only servers never pay for it.  Pass an existing
+        ``session`` to share its caches/backend, or a ``backend`` name to
+        open a fresh one (see :func:`repro.connect`)."""
         assert batch_size > 0
         self.fr = fr
         self.batch_size = batch_size
         self.with_dist = with_dist
+        self.session = session or connect(fr, backend=backend)
         self._queue: List[Union[QueryRequest, UpdateRequest]] = []
         self.batches_run = 0
         self.updates_applied = 0
         if warm:
-            prepare_rvset_cache(fr, with_dist=with_dist)
+            self.session.warm(with_dist=with_dist)
 
     # -- request intake ----------------------------------------------------
 
     def submit(self, s: int, t: int, kind: str = "reach",
-               bound: Optional[int] = None) -> QueryRequest:
-        assert kind in ("reach", "dist", "bounded")
+               bound: Optional[int] = None, regex: Optional[str] = None,
+               automaton: Optional[QueryAutomaton] = None) -> QueryRequest:
+        if kind not in VALID_KINDS:
+            raise ValueError(f"unknown query kind {kind!r}; expected one "
+                             f"of {VALID_KINDS}")
         if kind == "bounded" and bound is None:
             raise ValueError("bounded queries require a bound")
-        req = QueryRequest(int(s), int(t), kind, bound)
+        if kind != "bounded" and bound is not None:
+            raise ValueError(f"bound= is only valid for kind='bounded', "
+                             f"not {kind!r}")
+        if kind == "rpq" and (regex is None) == (automaton is None):
+            raise ValueError("rpq queries require exactly one of regex= "
+                             "or automaton=")
+        if kind != "rpq" and (regex is not None or automaton is not None):
+            raise ValueError(f"regex/automaton are only valid for "
+                             f"kind='rpq', not {kind!r}")
+        req = QueryRequest(int(s), int(t), kind, bound, regex, automaton)
         self._queue.append(req)
         return req
 
@@ -91,7 +125,7 @@ class QueryServer:
     def drain(self) -> List[Union[QueryRequest, UpdateRequest]]:
         """Serve the whole queue in submission order; returns the served
         requests with ``result`` filled in.  Queries are drained in
-        fixed-size batches; an update first flushes the queries queued
+        bounded-size batches; an update first flushes the queries queued
         before it (snapshot consistency), then repairs the cache."""
         queue, self._queue = self._queue, []   # new submits go to a fresh
         served: List[Union[QueryRequest, UpdateRequest]] = []   # queue
@@ -117,7 +151,7 @@ class QueryServer:
                         raise
                     # a bad update is reported via the raised exception and
                     # dropped; everything queued after it survives
-                    req.result = apply_delta(self.fr, req.delta)
+                    req.result = self.session.apply(req.delta)
                     self.updates_applied += 1
                     served.append(req)
                 else:
@@ -133,35 +167,21 @@ class QueryServer:
         return served
 
     def _serve_batch(self, reqs: List[QueryRequest]) -> None:
-        pad = self.batch_size - len(reqs)
-        padded = reqs + [reqs[-1]] * pad          # repeat: no retrace
-        pairs = np.array([(r.s, r.t) for r in padded], dtype=np.int64)
-        # one jitted call per kind present in the batch
-        kinds = {r.kind for r in reqs}
-        if "reach" in kinds:
-            ans = dis_reach_batch(self.fr, pairs)
-            for i, r in enumerate(reqs):
-                if r.kind == "reach":
-                    r.result = bool(ans[i])
-        if kinds & {"dist", "bounded"}:
-            d = dis_dist_batch(self.fr, pairs)
-            for i, r in enumerate(reqs):
-                if r.kind == "dist":
-                    r.result = None if d[i] < 0 else int(d[i])
-                elif r.kind == "bounded":
-                    r.result = bool(0 <= d[i] <= r.bound)
-        version = self.fr.rvset_cache.version     # built by the calls above
-        for r in reqs:
-            r.cache_version = version
+        """ONE session.run mixed batch; the planner fuses it into one
+        compiled execution per (kind, automaton) group."""
+        results = self.session.run([r.to_query() for r in reqs])
+        for r, res in zip(reqs, results):
+            r.result = res.distance if r.kind == "dist" else res.answer
+            r.cache_version = res.cache_version
         self.batches_run += 1
 
     # -- convenience -------------------------------------------------------
 
     def serve_pairs(self, pairs: Sequence[Tuple[int, int]],
-                    kind: str = "reach") -> List[object]:
+                    kind: str = "reach", **kw) -> List[object]:
         """Submit + drain in one call; returns the results for ``pairs``
         only (any previously queued requests are served too, but their
         results stay on their own request objects)."""
-        mine = [self.submit(s, t, kind=kind) for s, t in pairs]
+        mine = [self.submit(s, t, kind=kind, **kw) for s, t in pairs]
         self.drain()
         return [r.result for r in mine]

@@ -1,0 +1,357 @@
+"""QuerySession / planner / shims vs the seed engine and oracles.
+
+The session is a *routing* layer: whatever the planner fuses, every query
+in a mixed reach+dist+RPQ batch must answer exactly like the single-query
+seed paths (``dis_*``) and the networkx oracles — under the vmap backend,
+the shard_map backend (single-device compat here, 8 fake devices in the
+subprocess check), and across ``submit_delta`` snapshot boundaries.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.core import (Dist, GraphDelta, Reach, Rpq, build_query_automaton,
+                        dis_dist, dis_reach, dis_rpq, fragment_graph)
+from repro.core.plan import bucket_size, plan_queries
+from repro.graph import erdos_renyi, random_partition
+from repro.serve import QueryServer
+
+from oracles import oracle_dist, oracle_reach, oracle_rpq
+
+REGEXES = ["0* 1*", "(0|1)* 2"]
+
+
+def _case(n, m, k, seed):
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    return g, fragment_graph(g, random_partition(g, k, seed), k)
+
+
+def _automaton(regex):
+    return build_query_automaton(regex, lambda x: int(x))
+
+
+def _draw_mixed(data, n, n_queries):
+    """Random mixed-kind batch; a small endpoint pool forces duplicate
+    pairs and s == t cases."""
+    pool = [(data.draw(st.integers(0, n - 1), label="s"),
+             data.draw(st.integers(0, n - 1), label="t"))
+            for _ in range(max(2, n_queries // 2))]
+    qs = []
+    for _ in range(n_queries):
+        s, t = pool[data.draw(st.integers(0, len(pool) - 1), label="pair")]
+        kind = data.draw(st.integers(0, 2), label="kind")
+        if kind == 0:
+            qs.append(Reach(s, t))
+        elif kind == 1:
+            bound = data.draw(st.integers(-1, 4), label="bound")
+            qs.append(Dist(s, t, bound=None if bound < 0 else bound))
+        else:
+            rx = REGEXES[data.draw(st.integers(0, 1), label="rx")]
+            qs.append(Rpq(s, t, regex=rx))
+    return qs
+
+
+def _check_against_seed_and_oracle(g, fr, queries, results):
+    for q, r in zip(queries, results):
+        if isinstance(q, Reach):
+            assert r.answer == oracle_reach(g, q.s, q.t), q
+            assert r.answer == dis_reach(fr, q.s, q.t).answer
+        elif isinstance(q, Dist):
+            ref = dis_dist(fr, q.s, q.t, bound=q.bound)
+            assert (r.answer, r.distance) == (ref.answer, ref.distance), q
+            if q.bound is None:
+                assert r.distance == oracle_dist(g, q.s, q.t)
+        else:
+            qa = q.automaton or _automaton(q.regex)
+            assert r.answer == oracle_rpq(g, q.s, q.t, qa), q
+            assert r.answer == dis_rpq(fr, q.s, q.t, qa).answer
+
+
+# ---------------------------------------------------------------------------
+# property: mixed batches == seed single-query paths == oracles
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_property_session_mixed_batch_matches_oracles(data):
+    n = data.draw(st.integers(4, 20), label="n")
+    m = data.draw(st.integers(0, 50), label="m")
+    k = data.draw(st.integers(1, 4), label="k")
+    seed = data.draw(st.integers(0, 10_000), label="seed")
+    g, fr = _case(n, m, k, seed)
+    sess = repro.connect(fr, backend="vmap")
+    queries = _draw_mixed(data, n, 6)
+    results = sess.run(queries)
+    assert len(results) == len(queries)
+    _check_against_seed_and_oracle(g, fr, queries, results)
+    # one fused execution per (kind, automaton) group
+    assert sess.stats.executions == sess.last_plan.n_groups
+
+
+def test_session_shard_map_compat_single_device():
+    """backend='shard_map' on a 1-fragment mesh (the only shape a single
+    CPU device admits) answers identically to vmap."""
+    g = erdos_renyi(14, 35, n_labels=3, seed=4)
+    fr = fragment_graph(g, np.zeros(14, np.int32), 1)
+    sess = repro.connect(fr, backend="shard_map")
+    assert sess.backend == "shard_map"
+    qa = _automaton(REGEXES[0])
+    queries = [Reach(0, 5), Reach(5, 5), Dist(1, 7), Dist(2, 2, bound=0),
+               Rpq(3, 9, automaton=qa), Reach(6, 0)]
+    results = sess.run(queries)
+    _check_against_seed_and_oracle(g, fr, queries, results)
+
+
+def test_session_auto_backend_single_device_is_vmap():
+    g, fr = _case(12, 30, 3, 0)
+    assert repro.connect(fr).backend == "vmap"
+    with pytest.raises(ValueError, match="shard_map"):
+        repro.connect(fr, backend="shard_map")      # 3 fragments, 1 device
+    with pytest.raises(ValueError, match="backend"):
+        repro.connect(fr, backend="nope")
+    with pytest.raises(ValueError, match="cache"):
+        repro.connect(fr, cache="nope")
+
+
+# ---------------------------------------------------------------------------
+# planner mechanics
+# ---------------------------------------------------------------------------
+
+def test_planner_groups_by_kind_and_automaton():
+    qa1, qa2 = _automaton(REGEXES[0]), _automaton(REGEXES[1])
+    queries = [Reach(0, 1), Dist(0, 1), Rpq(0, 1, automaton=qa1),
+               Reach(2, 3), Dist(2, 3, bound=2), Rpq(2, 3, automaton=qa2),
+               Rpq(4, 5, automaton=_automaton(REGEXES[0]))]  # equal key
+    plan = plan_queries(queries, lambda q: q.automaton)
+    assert plan.n_groups == 4          # reach, dist(+bounded), rpq x2
+    kinds = [(grp.kind, grp.n) for grp in plan.groups]
+    assert kinds == [("reach", 2), ("dist", 2), ("rpq", 2), ("rpq", 1)]
+    # submission order is preserved through the group indices
+    assert sorted(i for grp in plan.groups for i in grp.indices) == \
+        list(range(len(queries)))
+    assert "fused executions" in plan.explain()
+
+
+def test_bucket_padding_avoids_retraces():
+    assert [bucket_size(n) for n in (1, 8, 9, 16, 17, 100)] == \
+        [8, 8, 16, 16, 32, 128]
+    g, fr = _case(16, 40, 2, 1)
+    sess = repro.connect(fr)
+    for n_batch in (1, 3, 5, 7):       # same bucket -> same compiled shape
+        res = sess.run([Reach(0, i + 1) for i in range(n_batch)])
+        assert len(res) == n_batch
+    assert sess.last_plan.groups[0].padded_size == 8
+
+
+def test_query_ir_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        Rpq(0, 1)
+    with pytest.raises(ValueError, match="exactly one"):
+        Rpq(0, 1, regex="0*", automaton=_automaton("0*"))
+    with pytest.raises(ValueError, match=">= 0"):
+        Reach(-1, 2)
+    with pytest.raises(TypeError):
+        plan_queries(["not a query"], lambda q: None)
+    # IR values are hashable/comparable, incl. automaton-based RPQs (the
+    # automaton holds numpy arrays; value semantics go via cache_key)
+    qa_a, qa_b = _automaton("0* 1"), _automaton("0* 1")
+    assert Rpq(0, 1, automaton=qa_a) == Rpq(0, 1, automaton=qa_b)
+    assert Rpq(0, 1, automaton=qa_a) != Rpq(0, 1, regex="0* 1")
+    assert len({Rpq(0, 1, automaton=qa_a), Rpq(0, 1, automaton=qa_b),
+                Reach(0, 1), Dist(0, 1)}) == 3
+
+
+def test_session_version_stamping_and_apply():
+    g, fr = _case(18, 40, 2, 5)
+    sess = repro.connect(fr, backend="vmap").warm()
+    r0 = sess.run([Reach(0, 1)])[0]
+    assert r0.cache_version == 0
+    stats = sess.apply(GraphDelta.insert([(0, 1)]))
+    assert stats.mode in ("repair", "recompute", "rebuild")
+    r1 = sess.run([Reach(0, 1)])[0]
+    assert r1.answer and r1.cache_version == r0.cache_version + 1
+    assert sess.stats.updates == 1
+    # uncached execution never consulted the cache -> stamped None even
+    # though a cache exists on the shared fragmentation
+    assert dis_reach(fr, 0, 1).cache_version is None
+
+
+# ---------------------------------------------------------------------------
+# shims & stats consistency
+# ---------------------------------------------------------------------------
+
+def test_cache_bearing_shims_warn_seed_paths_do_not():
+    import warnings as _w
+    from repro.core import (dis_dist_batch, dis_dist_cached, dis_reach_batch,
+                            dis_reach_cached, dis_rpq_cached)
+    g, fr = _case(12, 30, 2, 2)
+    qa = _automaton("0*")
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        dis_reach(fr, 0, 1)            # seed paths stay warning-free
+        dis_dist(fr, 0, 1)
+        dis_rpq(fr, 0, 1, qa)
+    for fn, args in [(dis_reach_cached, (fr, 0, 1)),
+                     (dis_dist_cached, (fr, 0, 1)),
+                     (dis_rpq_cached, (fr, 0, 1, qa)),
+                     (dis_reach_batch, (fr, [(0, 1)])),
+                     (dis_dist_batch, (fr, [(0, 1)]))]:
+        with pytest.warns(DeprecationWarning, match="repro.connect"):
+            fn(*args)
+
+
+def test_traffic_bits_consistent_across_kinds():
+    g, fr = _case(30, 90, 3, 3)
+    B, words = fr.B, (fr.B + 31) // 32
+    assert fr.traffic_bits("reach") == B * words * 32
+    assert fr.traffic_bits("dist") == B * B * 32
+    assert fr.traffic_bits("bounded") == fr.traffic_bits("dist")
+    qa = _automaton("0* 1")
+    side = B * qa.n_states
+    assert fr.traffic_bits("rpq", states=qa.n_states) == \
+        side * ((side + 31) // 32) * 32
+    with pytest.raises(ValueError, match="unknown query kind"):
+        fr.traffic_bits("nope")
+    # every query class reports through the one helper
+    assert dis_reach(fr, 0, 1).stats.payload_bits == fr.traffic_bits("reach")
+    assert dis_dist(fr, 0, 1).stats.payload_bits == fr.traffic_bits("dist")
+    assert dis_rpq(fr, 0, 1, qa).stats.payload_bits == \
+        fr.traffic_bits("rpq", states=qa.n_states)
+
+
+# ---------------------------------------------------------------------------
+# server: rpq kind, submit validation, batches spanning a delta
+# ---------------------------------------------------------------------------
+
+def test_server_submit_validates_kind_and_args():
+    g, fr = _case(10, 20, 2, 6)
+    srv = QueryServer(fr, batch_size=4, warm=False)
+    with pytest.raises(ValueError, match="unknown query kind 'reachh'"):
+        srv.submit(0, 1, kind="reachh")
+    with pytest.raises(ValueError, match="bound"):
+        srv.submit(0, 1, kind="bounded")
+    with pytest.raises(ValueError, match="only valid for kind='bounded'"):
+        srv.submit(0, 1, kind="dist", bound=3)    # meant kind="bounded"
+    with pytest.raises(ValueError, match="exactly one"):
+        srv.submit(0, 1, kind="rpq")
+    with pytest.raises(ValueError, match="only valid"):
+        srv.submit(0, 1, kind="reach", regex="0*")
+    assert srv.pending() == 0          # rejected submits never enqueue
+
+
+def test_server_serves_rpq_kind():
+    g, fr = _case(18, 50, 3, 7)
+    srv = QueryServer(fr, batch_size=4)
+    qa = _automaton(REGEXES[1])
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(9):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        # alternate regex / prebuilt automaton — same fused group either way
+        if i % 2:
+            reqs.append(srv.submit(s, t, kind="rpq", regex=REGEXES[1]))
+        else:
+            reqs.append(srv.submit(s, t, kind="rpq", automaton=qa))
+    srv.drain()
+    for r in reqs:
+        assert r.result == oracle_rpq(g, r.s, r.t, qa), (r.s, r.t)
+        assert r.cache_version is not None
+
+
+def test_server_mixed_batch_spanning_delta_snapshots():
+    """Queries on both sides of a submit_delta answer against their own
+    snapshot, for all three kinds in one drain."""
+    g, fr = _case(16, 26, 2, 8)
+    srv = QueryServer(fr, batch_size=8)
+    qa = _automaton("(0|1|2)*")
+    rng = np.random.default_rng(3)
+    pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n)))
+             for _ in range(4)]
+    pre = ([srv.submit(s, t) for s, t in pairs]
+           + [srv.submit(s, t, kind="dist") for s, t in pairs]
+           + [srv.submit(s, t, kind="rpq", automaton=qa)
+              for s, t in pairs])
+    pre_want = ([oracle_reach(g, s, t) for s, t in pairs]
+                + [oracle_dist(g, s, t) for s, t in pairs]
+                + [oracle_rpq(g, s, t, qa) for s, t in pairs])
+    delta = GraphDelta.insert(
+        [(int(rng.integers(g.n)), int(rng.integers(g.n)))
+         for _ in range(3)])
+    upd = srv.submit_delta(delta)
+    post = ([srv.submit(s, t) for s, t in pairs]
+            + [srv.submit(s, t, kind="rpq", automaton=qa)
+               for s, t in pairs])
+    srv.drain()
+    g2 = fr.g                                  # post-delta graph
+    post_want = ([oracle_reach(g2, s, t) for s, t in pairs]
+                 + [oracle_rpq(g2, s, t, qa) for s, t in pairs])
+    assert [r.result for r in pre] == pre_want
+    assert [r.result for r in post] == post_want
+    assert upd.result is not None and srv.updates_applied == 1
+    # snapshot stamps: everything before the delta at version v, after > v
+    v_pre = {r.cache_version for r in pre}
+    v_post = {r.cache_version for r in post}
+    assert len(v_pre) == 1 and len(v_post) == 1
+    assert v_post.pop() > v_pre.pop()
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend over 8 fake devices (subprocess, like test_guarantees)
+# ---------------------------------------------------------------------------
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+sys.path.insert(0, "__SRC__")
+sys.path.insert(0, "__TESTS__")
+import numpy as np
+import repro
+from repro.core import Dist, Reach, Rpq, build_query_automaton, fragment_graph
+from repro.graph import erdos_renyi, random_partition
+from oracles import oracle_dist, oracle_reach, oracle_rpq
+
+g = erdos_renyi(40, 120, n_labels=3, seed=7)
+fr = fragment_graph(g, random_partition(g, 8, 1), 8)
+sess = repro.connect(fr)                      # auto -> shard_map on 8 devs
+qa = build_query_automaton("(0|1)*", lambda x: int(x))
+rng = np.random.default_rng(2)
+queries, want = [], []
+for _ in range(10):
+    s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+    kind = int(rng.integers(3))
+    if kind == 0:
+        queries.append(Reach(s, t)); want.append(oracle_reach(g, s, t))
+    elif kind == 1:
+        queries.append(Dist(s, t)); want.append(oracle_dist(g, s, t))
+    else:
+        queries.append(Rpq(s, t, automaton=qa))
+        want.append(oracle_rpq(g, s, t, qa))
+res = sess.run(queries)
+got = [r.distance if isinstance(q, Dist) else r.answer
+       for q, r in zip(queries, res)]
+print(json.dumps({"backend": sess.backend, "ok": got == want,
+                  "groups": sess.last_plan.n_groups,
+                  "executions": sess.stats.executions}))
+"""
+
+
+def test_session_shard_map_mixed_batch_subprocess():
+    here = os.path.dirname(__file__)
+    code = (_SUBPROC
+            .replace("__SRC__", os.path.abspath(os.path.join(here, "..",
+                                                             "src")))
+            .replace("__TESTS__", os.path.abspath(here)))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rep["backend"] == "shard_map"
+    assert rep["ok"], rep
+    assert rep["executions"] == rep["groups"]
