@@ -18,7 +18,13 @@ shipping in an artifact:
   per-query cost must not exceed 2x the committed full-run value (the fast
   config is ~3x smaller), and fusing a mixed reach+dist+RPQ batch must
   beat the per-kind serving loop (committed >= 3x, fast >= a small-graph
-  floor — the RPQ group is what the per-kind loop cannot batch).
+  floor — the RPQ group is what the per-kind loop cannot batch);
+* sharded mixed batches (``BENCH_pr5``): both runs must report
+  ``answers_match`` (shard_map == vmap answers on the mixed workload) and
+  ``payload_bits_ok`` (summed per-group QueryStats == the wire size of
+  each group's single collective), and the fast-run shard_map per-query
+  cost must not exceed 3x the committed value (fake-device collectives on
+  one CPU are noisier than the vmap path, hence the looser factor).
 
 Exits non-zero with a FAIL line per violated bound.
 """
@@ -34,6 +40,7 @@ MIN_REPAIR_SPEEDUP_FAST = 2.0
 MIXED_REGRESSION_FACTOR = 2.0
 MIN_FUSED_SPEEDUP_FULL = 3.0
 MIN_FUSED_SPEEDUP_FAST = 1.3
+SHARDED_REGRESSION_FACTOR = 3.0
 
 
 def _load(path: str) -> dict:
@@ -105,6 +112,28 @@ def main(argv=None) -> int:
         "fused_speedup (fast run)",
         fs_fast >= MIN_FUSED_SPEEDUP_FAST,
         f"fast {fs_fast:.2f}x (floor {MIN_FUSED_SPEEDUP_FAST}x)",
+    )
+
+    base5 = _load(f"{root}/BENCH_pr5.json")
+    fast5 = _load(f"{root}/BENCH_pr5.fast.json")
+    for tag, rep in (("committed", base5), ("fast", fast5)):
+        check(
+            f"sharded answers_match ({tag})",
+            rep["answers_match"],
+            "shard_map answers == vmap answers on the mixed batch",
+        )
+        check(
+            f"sharded payload_bits_ok ({tag})",
+            rep["payload_bits_ok"],
+            "summed group QueryStats == one-collective wire size",
+        )
+    sh_base = base5["shard_map_per_query_us"]
+    sh_fast = fast5["shard_map_per_query_us"]
+    check(
+        "shard_map_per_query_us",
+        sh_fast <= SHARDED_REGRESSION_FACTOR * sh_base,
+        f"fast {sh_fast:.1f}us vs committed {sh_base:.1f}us "
+        f"(limit {SHARDED_REGRESSION_FACTOR}x)",
     )
 
     if failures:

@@ -12,6 +12,10 @@ what must reproduce are the *relations* its tables/figures show:
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from typing import Callable, Dict, List
 
@@ -355,6 +359,111 @@ def exp_session(n: int = 900, m: int = 3600, k: int = 4,
         fused_speedup=per_kind_us / mixed_us,
         mixed_queries_per_sec=1e6 / mixed_us,
     )
+
+
+_SHARDED_MIXED_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(k)d"
+import json, sys, time
+sys.path.insert(0, %(src)r)
+import numpy as np
+import repro
+from repro.core import Dist, Reach, Rpq, build_query_automaton, fragment_graph
+from repro.graph.graph import Graph
+
+# locality workload (the paper notes |V_f| is small in practice): blocks of
+# n/k nodes, 92%% intra-block edges, partitioned along the blocks -> small
+# boundary, which is the regime where the (|V_f| |Q|)^2 closures stay cheap
+n, m, k, n_q = %(n)d, %(m)d, %(k)d, %(n_q)d
+rng = np.random.default_rng(0)
+per = n // k
+src, dst = [], []
+for _ in range(m):
+    if rng.random() < 0.92:
+        b = int(rng.integers(k))
+        src.append(b * per + int(rng.integers(per)))
+        dst.append(b * per + int(rng.integers(per)))
+    else:
+        src.append(int(rng.integers(n)))
+        dst.append(int(rng.integers(n)))
+g = Graph(n, np.array(src), np.array(dst),
+          rng.integers(0, 8, n).astype(np.int32))
+fr = fragment_graph(g, (np.arange(n) // per).astype(np.int32), k)
+automaton = build_query_automaton("(0|1)* 2", lambda x: int(x))
+rng = np.random.default_rng(0)
+queries = []
+for i in range(n_q):
+    s, t = int(rng.integers(n)), int(rng.integers(n))
+    kind = i %% 3
+    if kind == 0:
+        queries.append(Reach(s, t))
+    elif kind == 1:
+        queries.append(Dist(s, t, bound=None if i %% 2 else 10))
+    else:
+        queries.append(Rpq(s, t, automaton=automaton))
+
+def bench(backend):
+    sess = repro.connect(fr, backend=backend)
+    t0 = time.perf_counter()
+    res = sess.run(queries)              # builds caches + compiles groups
+    build_ms = (time.perf_counter() - t0) * 1e3
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = sess.run(queries)
+    us = (time.perf_counter() - t0) / reps / n_q * 1e6
+    return sess, res, build_ms, us
+
+sess_v, res_v, build_v, us_v = bench("vmap")
+sess_s, res_s, build_s, us_s = bench("shard_map")
+match = all((a.answer, a.distance) == (b.answer, b.distance)
+            for a, b in zip(res_v, res_s))
+
+# per-kind wire bits of the fused collectives + the sum-equals-wire check
+payload = {}
+bits_ok = True
+for grp in sess_s.last_plan.groups:
+    states = 1 if grp.automaton is None else grp.automaton.n_states
+    total = fr.traffic_bits(grp.kind, states=states, batch=grp.padded_size)
+    payload[grp.kind] = payload.get(grp.kind, 0) + total
+    bits_ok &= sum(res_s[i].stats.payload_bits
+                   for i in grp.indices) == total
+    bits_ok &= sum(res_s[i].stats.collective_rounds
+                   for i in grp.indices) == 1
+
+print(json.dumps(dict(
+    backend_checked=sess_s.backend, n=n, m=m, k=k, boundary=fr.B,
+    n_queries=n_q, n_groups=sess_s.last_plan.n_groups,
+    vmap_build_ms=build_v, shard_map_build_ms=build_s,
+    vmap_per_query_us=us_v, shard_map_per_query_us=us_s,
+    payload_bits_per_kind=payload, answers_match=bool(match),
+    payload_bits_ok=bool(bits_ok))))
+"""
+
+
+def exp_sharded_mixed(n: int = 400, m: int = 1600, k: int = 8,
+                      n_q: int = 48) -> Dict:
+    """Beyond-paper experiment (ISSUE 5): mixed reach+dist+RPQ batch
+    throughput on the vmap vs shard_map backends, now that every kind
+    keeps the one-collective-per-fused-group guarantee, plus the per-kind
+    wire bits of those collectives.  Runs in a subprocess with ``k`` fake
+    host devices so the one-fragment-per-device engine actually shards
+    (the timing compares the same workload on both backends on the same
+    hardware; on real accelerators the sharded localEval runs in
+    parallel instead of timeslicing one CPU)."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = _SHARDED_MIXED_SUBPROC % dict(src=src, n=n, m=m, k=k, n_q=n_q)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError("exp_sharded_mixed subprocess failed:\n"
+                           + out.stderr[-2000:])
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["backend_checked"] == "shard_map", res
+    assert res["answers_match"], "vmap and shard_map answers diverged"
+    assert res["payload_bits_ok"], "group stats != one-collective wire size"
+    return res
 
 
 def exp4_mapreduce(n: int = 800, m: int = 3200, k: int = 4) -> List[Dict]:

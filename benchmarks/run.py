@@ -119,12 +119,30 @@ def main() -> None:
                        "fast_mode": fast, **res}, f, indent=2)
         print(f"# wrote {out}")
 
+    def sharded_mixed():
+        res = pe.exp_sharded_mixed(n=int(320 * scale) + 80,
+                                   m=int(1280 * scale) + 320,
+                                   n_q=24 if fast else 48)
+        print("sharded_mixed/shard_map,"
+              f"{res['shard_map_per_query_us']:.1f},"
+              f"vmap_us={res['vmap_per_query_us']:.1f};"
+              f"answers_match={res['answers_match']};"
+              f"payload_bits_ok={res['payload_bits_ok']}")
+        print(f"sharded_mixed/vmap,{res['vmap_per_query_us']:.1f},")
+        out = "BENCH_pr5" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "sharded_mixed_batches",
+                       "fast_mode": fast, **res}, f, indent=2)
+        print(f"# wrote {out}")
+
     section("# ISSUE-2: amortized rvset cache + batched queries (Table-2 "
             "cfg)", amortized)
     section("# ISSUE-3: incremental cache maintenance under edge deltas",
             incremental)
     section("# ISSUE-4: unified session, mixed-kind fused batches",
             session_bench)
+    section("# ISSUE-5: sharded one-collective batches, all query kinds",
+            sharded_mixed)
 
     if failures:
         print(f"# FAILED sections ({len(failures)}): {failures}",

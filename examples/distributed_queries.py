@@ -72,6 +72,33 @@ def main():
     print(f"warm mixed batch of {len(queries)}: {per_q:.0f}us/query "
           f"(caches built once in {build * 1e3:.0f}ms)")
 
+    # shard_map backend: one fragment per device, and EVERY kind in the
+    # mixed batch keeps the paper's one-collective-per-fused-group
+    # guarantee (DESIGN.md Sec. 3.3).  Small locality graph so the
+    # replicated (|V_f| |Q|)^2 RPQ closure stays demo-sized.
+    per = 20
+    blocks = np.arange(8 * per) // per
+    src = rng.integers(0, per, 600) + per * rng.integers(8, size=600)
+    dst = rng.integers(0, per, 600) + per * rng.integers(8, size=600)
+    from repro.graph.graph import Graph
+    gs = Graph(8 * per, src, dst, rng.integers(0, 8, 8 * per).astype(np.int32))
+    frs = fragment_graph(gs, blocks.astype(np.int32), 8)
+    sharded = repro.connect(frs, backend="shard_map")
+    mixed = [Reach(0, 5), Dist(3, 150), Dist(9, 90, bound=4),
+             Rpq(1, 140, regex="(0|1)* 2"), Reach(100, 17)]
+    res = sharded.run(mixed)
+    host = repro.connect(frs, backend="vmap").run(mixed)
+    assert [(r.answer, r.distance) for r in res] == \
+        [(r.answer, r.distance) for r in host]
+    print(f"shard_map mixed batch over {frs.k} devices: "
+          f"{sharded.last_plan.n_groups} fused groups, one collective each")
+    for grp in sharded.last_plan.groups:
+        states = 1 if grp.automaton is None else grp.automaton.n_states
+        bits = frs.traffic_bits(grp.kind, states=states,
+                                batch=grp.padded_size)
+        assert sum(res[i].stats.payload_bits for i in grp.indices) == bits
+        print(f"  {grp.kind}: {grp.n} queries -> {bits}b on the wire")
+
 
 if __name__ == "__main__":
     main()

@@ -52,7 +52,7 @@ NO_NODE = np.int32(-(2 ** 30))     # gid that matches no L_S / L_T state
 # cache container + construction
 # ---------------------------------------------------------------------------
 
-MAX_RPQ_CLOSURES = 32      # FIFO-evicted: each is an [(nb*Q), (nb*Q)] matrix
+MAX_RPQ_CLOSURES = 32      # LRU-evicted: each is an [(nb*Q), (nb*Q)] matrix
 
 
 @dataclasses.dataclass
@@ -145,6 +145,122 @@ def get_rvset_cache(fr: Fragmentation, with_dist: bool = False) -> RvsetCache:
 
 
 # ---------------------------------------------------------------------------
+# replicated combine stage (shared by both backends: the vmap batched
+# kernels below and the sharded one-collective programs in core.distributed)
+# ---------------------------------------------------------------------------
+
+def combine_bool(direct, sb, tc, C):
+    """Boolean combine of the per-query phase through a closure:
+    ``ans = direct | OR_u (sb (or-and) C)[u] & tc[u]``.
+
+    ``sb``/``tc`` [N, side], ``C`` [side, side] with ``side = nb`` for plain
+    reachability or ``nb * |Q|`` for the product-automaton (RPQ) case —
+    the algebra is identical, only the state expansion differs.
+    """
+    if C.shape[0] == 0:
+        return direct
+    from ..kernels.bool_matmul.ops import or_and_matmul
+    sbc = or_and_matmul(sb, C)                             # [N, side]
+    return direct | jnp.any(sbc & tc, axis=1)
+
+
+def combine_dist(direct, sb, tc, Cd):
+    """Tropical twin of :func:`combine_bool`:
+    ``min(direct, min_u (sb (min-plus) Cd)[u] + tc[u])`` clipped at INF."""
+    if Cd.shape[0] == 0:
+        return jnp.minimum(direct, INF)
+    from ..kernels.tropical_matmul.ops import min_plus_matmul
+    sbc = min_plus_matmul(sb, Cd)                          # [N, nb]
+    via = jnp.min(jnp.minimum(sbc + tc, INF), axis=1)
+    return jnp.minimum(jnp.minimum(direct, via), INF)
+
+
+# ---------------------------------------------------------------------------
+# per-device local stage (sharded backend: each device contributes its own
+# fragment's D0/W0 rows, per-pair s-rows and t-column entries, which ride
+# the ONE collective of core.distributed.dis_*_batch_sharded)
+# ---------------------------------------------------------------------------
+
+def local_stage_reach(esrc, edst, src_local, s_slot, t_slot, srcidx, own,
+                      tgt_mine, *, n_max: int):
+    """One device's local stage of a fused reach batch.
+
+    Runs this fragment's all-sources fixpoint and N per-pair single-source
+    propagations, then extracts the fragment's contributions: its owned
+    ``D0`` rows, the s-row and direct bit of every pair whose source it
+    owns, and the t-column entries of its own in-nodes.  Shapes:
+    ``s_slot``/``t_slot`` [N] (local slot of s_j / t_j here, ``n_max`` if
+    absent); ``srcidx`` [nb] (boundary position -> source-row index here,
+    pad row elsewhere); ``own`` [nb] ownership mask; ``tgt_mine`` [nb]
+    (stub slot of boundary w here).  Returns ``(d0 [nb, nb], sb [N, nb],
+    direct [N], tc [N, nb])`` — all-false outside this device's ownership,
+    so the cross-device merge is a plain bitwise OR.
+    """
+    F = engine.local_frontier_reach(esrc, edst, src_local,
+                                    n_max=n_max)           # [S, n+1]
+    rows = jnp.take(F, srcidx, axis=0)                     # [nb, n+1]
+    d0 = jnp.take(rows, tgt_mine, axis=1) & own[:, None]   # [nb, nb]
+    fS = jax.vmap(lambda sl: engine.single_source_reach(
+        esrc, edst, sl, n_max=n_max))(s_slot)              # [N, n+1]
+    sb = jnp.take(fS, tgt_mine, axis=1)                    # [N, nb]
+    direct = jnp.take_along_axis(fS, t_slot[:, None], axis=1)[:, 0]
+    tc = jnp.take(rows, t_slot, axis=1).T & own[None, :]   # [N, nb]
+    return d0, sb, direct, tc
+
+
+def local_stage_dist(esrc, edst, src_local, s_slot, t_slot, srcidx, own,
+                     tgt_mine, *, n_max: int):
+    """Tropical twin of :func:`local_stage_reach`: the semiring zero is INF,
+    so non-owned entries ship INF and the cross-device merge is a min.
+    Returns ``(w0 [nb, nb], sb [N, nb], direct [N], tc [N, nb])`` int32."""
+    F = engine.local_frontier_dist(esrc, edst, src_local,
+                                   n_max=n_max)            # [S, n+1]
+    rows = jnp.take(F, srcidx, axis=0)                     # [nb, n+1]
+    w0 = jnp.where(own[:, None], jnp.take(rows, tgt_mine, axis=1), INF)
+    fS = jax.vmap(lambda sl: engine.single_source_dist(
+        esrc, edst, sl, n_max=n_max))(s_slot)              # [N, n+1]
+    sb = jnp.take(fS, tgt_mine, axis=1)                    # [N, nb]
+    direct = jnp.take_along_axis(fS, t_slot[:, None], axis=1)[:, 0]
+    tc = jnp.where(own[None, :], jnp.take(rows, t_slot, axis=1).T, INF)
+    return w0, sb, direct, tc
+
+
+def local_stage_rpq(esrc, edst, src_local, src_row, tgt_local, labels, gids,
+                    q_labels, q_trans, q_start, s_slot, t_slot, s_gids,
+                    t_gids, local_b, mine, *, n_max: int, B: int):
+    """Product-automaton local stage of a fused RPQ batch (one device).
+
+    The query-independent part is this fragment's product rvset rows
+    (``local_eval_regular`` with the s/t sentinels matched off, exactly
+    like :func:`product_closure`); the per-pair part is one forward product
+    propagation from ``(s_j, u_s)`` and one reverse product propagation to
+    ``(t_j, u_t)`` per pair.  ``local_b`` [nb] is the local slot of each
+    boundary node inside its *owner*; ``mine`` [nb] masks the in-nodes this
+    device owns.  Returns ``(d0 [(nb*Q), (nb*Q)], sb [N, nb*Q], direct [N],
+    tc [N, nb*Q])``.
+    """
+    Q = q_labels.shape[0]
+    nb = B - 2
+    rloc = engine.local_eval_regular(
+        esrc, edst, src_local, src_row, tgt_local, labels, gids,
+        q_labels, q_trans, jnp.int32(n_max), jnp.int32(n_max),
+        jnp.int32(NO_NODE), jnp.int32(NO_NODE), n_max=n_max, B=B)
+    d0 = rloc.reshape(B, Q, B, Q)[:nb, :, :nb, :].reshape(nb * Q, nb * Q)
+    f = jax.vmap(lambda sl, sg, tg: engine.single_source_regular(
+        esrc, edst, labels, gids, q_labels, q_trans, sl, q_start, sg, tg,
+        n_max=n_max))(s_slot, s_gids, t_gids)              # [N, n+1, Q]
+    direct = jnp.take_along_axis(f[:, :, Q - 1], t_slot[:, None],
+                                 axis=1)[:, 0]             # [N]
+    sb = jnp.take(f, tgt_local[:nb], axis=1)               # [N, nb, Q]
+    rev = jax.vmap(lambda ts, sg, tg: engine.reverse_target_regular(
+        esrc, edst, labels, gids, q_labels, q_trans, ts, sg, tg,
+        n_max=n_max))(t_slot, s_gids, t_gids)              # [N, n+1, Q]
+    tc = jnp.take(rev, local_b, axis=1) & mine[None, :, None]  # [N, nb, Q]
+    N = f.shape[0]
+    return d0, sb.reshape(N, nb * Q), direct, tc.reshape(N, nb * Q)
+
+
+# ---------------------------------------------------------------------------
 # batched per-query phase (one jitted call for N pairs)
 # ---------------------------------------------------------------------------
 
@@ -163,9 +279,7 @@ def _batch_reach_kernel(esrc, edst, tgt_local, bl, C, frag_s, s_slot,
     tgt_s = jnp.take(tgt_local, frag_s, axis=0)[:, :nb]    # [N, nb]
     sb = jnp.take_along_axis(f, tgt_s, axis=1)             # [N, nb]
     tc = jax.vmap(lambda c: bl[jnp.arange(nb), c])(t_cols)  # [N, nb]
-    from ..kernels.bool_matmul.ops import or_and_matmul
-    sbc = or_and_matmul(sb, C) if nb else sb               # [N, nb]
-    return direct | jnp.any(sbc & tc, axis=1)
+    return combine_bool(direct, sb, tc, C)
 
 
 @functools.partial(jax.jit, static_argnames=("n_max",))
@@ -182,13 +296,7 @@ def _batch_dist_kernel(esrc, edst, tgt_local, bl_d, Cd, frag_s, s_slot,
     tgt_s = jnp.take(tgt_local, frag_s, axis=0)[:, :nb]
     sb = jnp.take_along_axis(f, tgt_s, axis=1)             # [N, nb]
     tc = jax.vmap(lambda c: bl_d[jnp.arange(nb), c])(t_cols)
-    from ..kernels.tropical_matmul.ops import min_plus_matmul
-    if nb:
-        sbc = min_plus_matmul(sb, Cd)                      # [N, nb]
-        via = jnp.min(jnp.minimum(sbc + tc, INF), axis=1)
-    else:
-        via = jnp.full(direct.shape, INF, jnp.int32)
-    return jnp.minimum(jnp.minimum(direct, via), INF)
+    return combine_dist(direct, sb, tc, Cd)
 
 
 def _batch_inputs(fr: Fragmentation, cache: RvsetCache,
@@ -279,8 +387,13 @@ def product_closure(fr: Fragmentation, qa: QueryAutomaton,
     """
     cache = get_rvset_cache(fr)
     key = _qa_key(qa)
-    if key in cache.rpq_closures:
-        return cache.rpq_closures[key]
+    C = cache.rpq_closures.get(key)
+    if C is not None:
+        # true LRU: a hit moves the key back to the MRU end of the (insert-
+        # ordered) dict, so a hot automaton is never FIFO-evicted by churn
+        cache.rpq_closures.pop(key)
+        cache.rpq_closures[key] = C
+        return C
     arrs = cache.arrays
     q_labels = jnp.asarray(qa.state_labels)
     q_trans = jnp.asarray(qa.trans)
@@ -300,7 +413,9 @@ def product_closure(fr: Fragmentation, qa: QueryAutomaton,
     D = D.reshape(B, Q, B, Q)[:nb, :, :nb, :].reshape(nb * Q, nb * Q)
     C = bes.bool_closure(D, use_pallas=use_pallas)
     # bound the per-automaton cache: each closure is (nb*Q)^2 bools, and a
-    # server facing user-supplied regexes must not grow without limit
+    # server facing user-supplied regexes must not grow without limit.
+    # dict order is recency order (hits re-insert at the MRU end), so the
+    # first key is the least recently used one
     while len(cache.rpq_closures) >= MAX_RPQ_CLOSURES:
         cache.rpq_closures.pop(next(iter(cache.rpq_closures)))
     cache.rpq_closures[key] = C
@@ -343,10 +458,9 @@ def _batch_rpq_kernel(esrc, edst, labels, gids, tgt_local, q_labels, q_trans,
     sb = jnp.take_along_axis(f, tgt_s[:, :, None], axis=1)  # [N, nb, Q]
     # spare boundary slots read the (all-false) pad row of rev via local_b
     tc = rev[:, part_b, local_b, :]                        # [N, nb, Q]
-    from ..kernels.bool_matmul.ops import or_and_matmul
     N = f.shape[0]
-    sbc = or_and_matmul(sb.reshape(N, nb * Q), C)          # [N, nb*Q]
-    return direct | jnp.any(sbc & tc.reshape(N, nb * Q), axis=1)
+    return combine_bool(direct, sb.reshape(N, nb * Q),
+                        tc.reshape(N, nb * Q), C)
 
 
 def dis_rpq_batch(fr: Fragmentation, pairs, qa: QueryAutomaton) -> np.ndarray:

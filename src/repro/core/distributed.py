@@ -31,10 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import cache as _cache
 from . import engine
 from ..kernels.bitpack_ops.ops import pack_payload, unpack_payload
 from .automaton import QueryAutomaton
-from .bes import bool_closure
+from .bes import bool_closure, tropical_closure
 from .fragments import Fragmentation, query_slots
 
 # jax.shard_map moved to the top level after 0.4.x; support both.  The
@@ -189,8 +190,194 @@ def lower_reach_hlo(fr: Fragmentation, s: int, t: int,
 
 
 # ---------------------------------------------------------------------------
-# batched sharded engine: N pairs, ONE packed collective (DESIGN.md Sec. 3.3)
+# batched sharded engine: N pairs, ONE packed collective per fused group,
+# for ALL THREE query classes (DESIGN.md Sec. 3.3)
 # ---------------------------------------------------------------------------
+#
+# Shared structure (the local stage lives in core.cache.local_stage_*, the
+# combine in core.cache.combine_*, so both backends evolve together): each
+# device runs its own fragment's query-independent rows (D0 / W0 / product
+# rvset) plus the per-pair s-rows, direct entries, and t-column entries it
+# owns, concatenates everything into ONE payload of shape
+# [side + 2N, side + 1] (side = nb, or nb*|Q| for RPQs; the extra column
+# carries the per-pair direct answer), and a single collective merges it:
+# psum over bitpacked uint32 words for the Boolean payloads (no carries —
+# every bit is computed on exactly one device: d0/sb rows by their owner,
+# tc[:, u] by frag(u)), pmin over raw int32 for the tropical wire (exact
+# because non-owners ship INF).  Closure + combine run replicated, exactly
+# like evalDG.  The compiled programs are cached per (mesh, geometry, N)
+# so steady-state batches neither retrace nor recompile, and survive
+# in-place deltas (all fragment data is passed as arguments, none baked in).
+
+def _split_merged(merged, side: int, N: int):
+    """Undo the payload concatenation: (d0, sb, direct, tc)."""
+    return (merged[:side, :side], merged[side:side + N, :side],
+            merged[side:side + N, side], merged[side + N:, :side])
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_reach_jitted(mesh: Mesh, nb: int, n_max: int, N: int):
+    in_specs = tuple(P(FRAG_AXIS) for _ in range(8))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=P())
+    def run(esrc, edst, src_local, tgt_local, s_slot, t_slot, srcidx, own):
+        d0, sb, direct, tc = _cache.local_stage_reach(
+            esrc[0], edst[0], src_local[0], s_slot[0], t_slot[0],
+            srcidx[0], own[0], tgt_local[0][:nb], n_max=n_max)
+        payload = jnp.concatenate([
+            jnp.concatenate([d0, jnp.zeros((nb, 1), bool)], axis=1),
+            jnp.concatenate([sb, direct[:, None]], axis=1),
+            jnp.concatenate([tc, jnp.zeros((N, 1), bool)], axis=1),
+        ], axis=0)                                         # [nb+2N, nb+1]
+        merged = unpack_payload(
+            jax.lax.psum(pack_payload(payload), FRAG_AXIS), nb + 1)
+        d0_m, sb_m, direct_m, tc_m = _split_merged(merged, nb, N)
+        # replicated: closure by repeated squaring + per-pair combine
+        return _cache.combine_bool(direct_m, sb_m, tc_m,
+                                         bool_closure(d0_m))
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_dist_jitted(mesh: Mesh, nb: int, n_max: int, N: int):
+    in_specs = tuple(P(FRAG_AXIS) for _ in range(8))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=P())
+    def run(esrc, edst, src_local, tgt_local, s_slot, t_slot, srcidx, own):
+        w0, sb, direct, tc = _cache.local_stage_dist(
+            esrc[0], edst[0], src_local[0], s_slot[0], t_slot[0],
+            srcidx[0], own[0], tgt_local[0][:nb], n_max=n_max)
+        inf_b = jnp.full((nb, 1), engine.INF, jnp.int32)
+        inf_n = jnp.full((N, 1), engine.INF, jnp.int32)
+        payload = jnp.concatenate([
+            jnp.concatenate([w0, inf_b], axis=1),
+            jnp.concatenate([sb, direct[:, None]], axis=1),
+            jnp.concatenate([tc, inf_n], axis=1),
+        ], axis=0)                                         # [nb+2N, nb+1]
+        # the ONE collective: min-reduce the int32 tropical wire — exact
+        # because every entry is computed on exactly one device (w0 and sb
+        # rows by their owner, tc[:, u] by frag(u)) and all others ship
+        # INF, the tropical zero.  int32 rows do not bitpack, so the wire
+        # carries the rows actually contributed, never the B^2 matrix.
+        merged = jax.lax.pmin(payload, FRAG_AXIS)
+        w0_m, sb_m, direct_m, tc_m = _split_merged(merged, nb, N)
+        return _cache.combine_dist(direct_m, sb_m, tc_m,
+                                         tropical_closure(w0_m))
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=64)
+def _batch_rpq_jitted(mesh: Mesh, nb: int, n_max: int, B: int, Q: int,
+                      q_start: int, N: int):
+    side = nb * Q
+    in_specs = tuple(P(FRAG_AXIS) for _ in range(10)) + \
+        tuple(P() for _ in range(5))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                       out_specs=P())
+    def run(esrc, edst, src_local, src_row, tgt_local, labels, gids,
+            s_slot, t_slot, mine, q_labels, q_trans, s_gids, t_gids,
+            local_b):
+        d0, sb, direct, tc = _cache.local_stage_rpq(
+            esrc[0], edst[0], src_local[0], src_row[0], tgt_local[0],
+            labels[0], gids[0], q_labels, q_trans, jnp.int32(q_start),
+            s_slot[0], t_slot[0], s_gids, t_gids, local_b, mine[0],
+            n_max=n_max, B=B)
+        payload = jnp.concatenate([
+            jnp.concatenate([d0, jnp.zeros((side, 1), bool)], axis=1),
+            jnp.concatenate([sb, direct[:, None]], axis=1),
+            jnp.concatenate([tc, jnp.zeros((N, 1), bool)], axis=1),
+        ], axis=0)                                 # [side+2N, side+1]
+        merged = unpack_payload(
+            jax.lax.psum(pack_payload(payload), FRAG_AXIS), side + 1)
+        d0_m, sb_m, direct_m, tc_m = _split_merged(merged, side, N)
+        return _cache.combine_bool(direct_m, sb_m, tc_m,
+                                         bool_closure(d0_m))
+
+    return jax.jit(run)
+
+
+
+def _srcidx_own(fr: Fragmentation):
+    """Host-side inverse of ``src_row``: for each fragment, the source-row
+    index of every boundary position it owns (pad row ``S-1`` — the
+    reserved s slot, never a real in-node row — elsewhere) plus the
+    ownership mask.  [k, nb] each."""
+    src_row = fr.arrays["src_row"]                         # [k, S]
+    k, S, nb = fr.k, src_row.shape[1], fr.n_boundary
+    srcidx = np.full((k, nb), S - 1, dtype=np.int32)
+    own = np.zeros((k, nb), dtype=bool)
+    for i in range(k):
+        mine = src_row[i] < fr.B - 2
+        srcidx[i, src_row[i, mine]] = np.nonzero(mine)[0]
+        own[i, src_row[i, mine]] = True
+    return srcidx, own
+
+
+def _device_inputs(fr: Fragmentation) -> dict:
+    """Query-independent device uploads for the batched sharded engines —
+    the fragment arrays plus the boundary-ownership gathers — memoized on
+    ``fr.arrays_version`` so steady-state batches skip the host-to-device
+    copy of the edge lists entirely; any ``apply_delta``/``rebuild``
+    (which mutates the host arrays in place and bumps the version)
+    invalidates the memo."""
+    memo = fr.__dict__.get("_sharded_device_inputs")
+    if memo is not None and memo["version"] == fr.arrays_version:
+        return memo
+    srcidx, own = _srcidx_own(fr)
+    mine = fr.boundary_owner()[None, :] == np.arange(fr.k)[:, None]
+    mine[:, fr.nb_active:] = False     # spare slots are owned by nobody
+    memo = dict(
+        version=fr.arrays_version,
+        arrs={key: jnp.asarray(v) for key, v in fr.arrays.items()},
+        srcidx=jnp.asarray(srcidx), own=jnp.asarray(own),
+        mine=jnp.asarray(mine), local_b=jnp.asarray(fr.boundary_local()))
+    fr.__dict__["_sharded_device_inputs"] = memo
+    return memo
+
+
+def _batch_sharded_program(fr: Fragmentation, pairs: np.ndarray, kind: str,
+                           qa: Optional[QueryAutomaton] = None,
+                           mesh: Optional[Mesh] = None):
+    """(compiled-program, args) for one fused N-pair sharded batch of
+    ``kind``.  All fragment data rides in as arguments, so one compiled
+    program per (mesh, geometry, batch-bucket) serves every batch and
+    stays valid across in-place graph deltas."""
+    mesh = mesh or fragment_mesh(fr.k)
+    assert mesh.devices.size == fr.k, "one device (shard) per fragment"
+    k, n_max, N = fr.k, fr.n_max, len(pairs)
+    ss, tt = pairs[:, 0], pairs[:, 1]
+    # per-device query inputs: [k, N] local slots of s and t (n_max absent)
+    s_slots = np.full((k, N), n_max, dtype=np.int32)
+    s_slots[fr.part[ss], np.arange(N)] = fr.owner_local[ss]
+    t_slots = fr.slot_index()[tt, :].T.copy()              # [k, N]
+    dev = _device_inputs(fr)
+    arrs = dev["arrs"]
+    if kind == "rpq":
+        run = _batch_rpq_jitted(mesh, fr.n_boundary, n_max, fr.B,
+                                qa.n_states, int(qa.start), N)
+        args = (arrs["esrc"], arrs["edst"], arrs["src_local"],
+                arrs["src_row"], arrs["tgt_local"], arrs["labels"],
+                arrs["gids"], jnp.asarray(s_slots), jnp.asarray(t_slots),
+                dev["mine"], jnp.asarray(qa.state_labels),
+                jnp.asarray(qa.trans), jnp.asarray(ss.astype(np.int32)),
+                jnp.asarray(tt.astype(np.int32)), dev["local_b"])
+        return run, args
+    jitted = {"reach": _batch_reach_jitted, "dist": _batch_dist_jitted}
+    run = jitted[kind](mesh, fr.n_boundary, n_max, N)
+    args = (arrs["esrc"], arrs["edst"], arrs["src_local"],
+            arrs["tgt_local"], jnp.asarray(s_slots), jnp.asarray(t_slots),
+            dev["srcidx"], dev["own"])
+    return run, args
+
+
+def _as_batch_pairs(pairs) -> np.ndarray:
+    return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+
 
 def dis_reach_batch_sharded(fr: Fragmentation, pairs,
                             mesh: Optional[Mesh] = None) -> np.ndarray:
@@ -199,86 +386,59 @@ def dis_reach_batch_sharded(fr: Fragmentation, pairs,
     Each device contributes, for its own fragment: its rows of the boundary
     dependency matrix D0 (all-sources local fixpoint), the s-row of every
     pair whose source it owns, and the t-column entries of every pair for
-    its own in-nodes.  All three ride ONE bitpacked pmax; the closure and
-    the per-pair combine run replicated.
+    its own in-nodes.  All three ride ONE bitpacked psum (== OR: every bit
+    is computed on exactly one device); the closure and the per-pair
+    combine run replicated.
     """
-    pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
-    N = len(pairs)
-    if N == 0:
+    pairs = _as_batch_pairs(pairs)
+    if len(pairs) == 0:
         return np.zeros(0, dtype=bool)
-    mesh = mesh or fragment_mesh(fr.k)
-    assert mesh.devices.size == fr.k, "one device (shard) per fragment"
-    nb, n_max, k = fr.n_boundary, fr.n_max, fr.k
-    slot_of = fr.slot_index()                              # [n, k]
-    ss, tt = pairs[:, 0], pairs[:, 1]
-
-    # per-device query inputs: [k, N] local slots of s and t (n_max absent)
-    s_slots = np.full((k, N), n_max, dtype=np.int32)
-    s_slots[fr.part[ss], np.arange(N)] = fr.owner_local[ss]
-    t_slots = slot_of[tt, :].T.copy()                      # [k, N]
-    # inverse of src_row: boundary position -> source-row index on owner
-    src_row = fr.arrays["src_row"]                         # [k, S]
-    S = src_row.shape[1]
-    srcidx = np.full((k, nb), S - 1, dtype=np.int32)       # pad row: s slot
-    for i in range(k):
-        own = src_row[i] < fr.B - 2
-        srcidx[i, src_row[i, own]] = np.nonzero(own)[0]
-
-    arrs = {key: jnp.asarray(v) for key, v in fr.arrays.items()}
-    args = (arrs["esrc"], arrs["edst"], arrs["src_local"],
-            jnp.asarray(s_slots), jnp.asarray(t_slots), jnp.asarray(srcidx))
-    in_specs = tuple(P(FRAG_AXIS) for _ in args)
-
-    @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
-                       out_specs=P())
-    def run(esrc, edst, src_local, s_slot, t_slot, srcidx):
-        esrc, edst, src_local = esrc[0], edst[0], src_local[0]
-        s_slot, t_slot, srcidx = s_slot[0], t_slot[0], srcidx[0]
-        # query-independent phase: this fragment's all-sources fixpoint
-        F = engine.local_frontier_reach(esrc, edst, src_local,
-                                        n_max=n_max)       # [S, n+1]
-        my = jax.lax.axis_index(FRAG_AXIS)
-        tgt_mine = jnp.asarray(fr.arrays["tgt_local"])[my][:nb]  # [nb]
-        # D0 rows owned by this fragment: [nb, nb]
-        rows = jnp.take(F, srcidx, axis=0)                 # [nb, n+1]
-        d0 = jnp.take(rows, tgt_mine, axis=1)              # [nb, nb]
-        own_rows = jnp.asarray(fr.arrays["src_row"])[my][srcidx] < fr.B - 2
-        d0 = d0 & own_rows[:, None]
-        # per-pair s-rows (pairs whose s lives here; others all-false)
-        fS = jax.vmap(lambda sl: engine.single_source_reach(
-            esrc, edst, sl, n_max=n_max))(s_slot)          # [N, n+1]
-        sb = jnp.take(fS, tgt_mine, axis=1)                # [N, nb]
-        direct = jnp.take_along_axis(fS, t_slot[:, None], axis=1)  # [N, 1]
-        # per-pair t-column entries for this fragment's in-nodes
-        tc = jnp.take(rows, t_slot, axis=1).T              # [N, nb]
-        tc = tc & own_rows[None, :]
-        # ONE collective: rows of [D0 | SB+direct | TC] packed to uint32.
-        # psum, not pmax: tc bits are owned per *column* (the fragment of
-        # boundary node u), so one packed word can mix bits from several
-        # devices.  Every bit is still computed on exactly one device (d0
-        # and sb rows by their owner, tc[:, u] by frag(u)), so the word sum
-        # has no carries and equals the bitwise OR.
-        payload = jnp.concatenate([
-            jnp.concatenate([d0, jnp.zeros((nb, 1), bool)], axis=1),
-            jnp.concatenate([sb, direct], axis=1),
-            jnp.concatenate([tc, jnp.zeros((N, 1), bool)], axis=1),
-        ], axis=0)                                         # [nb+2N, nb+1]
-        merged = unpack_payload(
-            jax.lax.psum(pack_payload(payload), FRAG_AXIS), nb + 1)
-        d0_m = merged[:nb, :nb]
-        sb_m = merged[nb:nb + N, :nb]
-        direct_m = merged[nb:nb + N, nb]
-        tc_m = merged[nb + N:, :nb]
-        # replicated: closure by repeated squaring + per-pair combine
-        C = bool_closure(d0_m)
-        from ..kernels.bool_matmul.ops import or_and_matmul
-        sbc = or_and_matmul(sb_m, C) if nb else sb_m
-        return direct_m | jnp.any(sbc & tc_m, axis=1)
-
-    out = jax.jit(run)(*args)
-    ans = np.array(out)
-    ans[ss == tt] = True
+    run, args = _batch_sharded_program(fr, pairs, "reach", mesh=mesh)
+    ans = np.array(run(*args))
+    ans[pairs[:, 0] == pairs[:, 1]] = True
     return ans
+
+
+def dis_dist_batch_sharded(fr: Fragmentation, pairs,
+                           mesh: Optional[Mesh] = None) -> np.ndarray:
+    """Tropical twin of :func:`dis_reach_batch_sharded`: N shortest
+    distances with ONE int32 pmin collective (W0 rows + per-pair tropical
+    s-rows and t-columns).  Returns [N] int64 with -1 for unreachable —
+    the same contract as the host ``cache.dis_dist_batch``."""
+    pairs = _as_batch_pairs(pairs)
+    if len(pairs) == 0:
+        return np.zeros(0, dtype=np.int64)
+    run, args = _batch_sharded_program(fr, pairs, "dist", mesh=mesh)
+    d = np.asarray(run(*args)).astype(np.int64)
+    d[d >= int(engine.INF)] = -1
+    return d
+
+
+def dis_rpq_batch_sharded(fr: Fragmentation, pairs, qa: QueryAutomaton,
+                          mesh: Optional[Mesh] = None) -> np.ndarray:
+    """Product-automaton twin of :func:`dis_reach_batch_sharded` for one
+    automaton: each device ships its product rvset rows plus N forward /
+    reverse product propagations' contributions in ONE bitpacked psum;
+    the (nb|Q|)^2 closure and combine run replicated.  Returns [N] bool
+    (s == t answered by nullability, like ``cache.dis_rpq_batch``)."""
+    pairs = _as_batch_pairs(pairs)
+    if len(pairs) == 0:
+        return np.zeros(0, dtype=bool)
+    run, args = _batch_sharded_program(fr, pairs, "rpq", qa=qa, mesh=mesh)
+    ans = np.array(run(*args))
+    ans[pairs[:, 0] == pairs[:, 1]] = bool(qa.nullable)
+    return ans
+
+
+def lower_batch_hlo(fr: Fragmentation, pairs, kind: str,
+                    qa: Optional[QueryAutomaton] = None,
+                    mesh: Optional[Mesh] = None) -> str:
+    """Lowered HLO text of one fused sharded batch of ``kind`` — used by
+    tests to assert the one-collective-per-group guarantee and the payload
+    dtype/shape structurally, for all three query classes."""
+    pairs = _as_batch_pairs(pairs)
+    run, args = _batch_sharded_program(fr, pairs, kind, qa=qa, mesh=mesh)
+    return run.lower(*args).as_text()
 
 
 # ---------------------------------------------------------------------------

@@ -40,9 +40,17 @@ INF = jnp.int32(1 << 29)
 
 
 class QueryStats(NamedTuple):
-    """Measured guarantees (paper Theorems 1-3)."""
-    payload_bits: int        # rvset bits shipped (<= |V_f|^2 or |R|^2|V_f|^2)
-    collective_rounds: int   # visits per site (== 1)
+    """Measured guarantees (paper Theorems 1-3).
+
+    Queries served inside a fused batch carry *group-amortized* stats
+    (core.session): the group's ONE collective is split across its
+    queries, so summing over any group yields exactly the wire size of
+    that collective and one round — never N copies of it.
+    """
+    payload_bits: int        # rvset bits shipped (<= |V_f|^2 or |R|^2|V_f|^2;
+                             # amortized share of the group wire when fused)
+    collective_rounds: int   # visits per site (seed: 1; fused: 1 per group,
+                             # stamped on the group's first query)
     boundary: int            # |V_f| + 2 query slots
     states: int              # |Q| (1 for plain/bounded reachability)
 

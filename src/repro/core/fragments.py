@@ -131,6 +131,9 @@ class Fragmentation:
                                           compare=False)  # gid -> stub slot
     reserve: Dict[str, int] = dataclasses.field(default=None, repr=False,
                                                 compare=False)
+    # bumped on every in-place mutation of the host arrays (apply_delta /
+    # rebuild) — consumers that memoize device uploads key on it
+    arrays_version: int = 0
 
     @property
     def B(self) -> int:       # boundary matrix side (capacity + query slots)
@@ -198,23 +201,43 @@ class Fragmentation:
         side = self.B * states
         return packed_bits(side, side)
 
-    def traffic_bits(self, kind: str = "reach", states: int = 1) -> int:
-        """Wire size of the ONE collective for a single query of ``kind``
-        (DESIGN.md Sec. 4).  All query classes route through here so
-        ``QueryStats.payload_bits`` stays consistent across kinds:
+    def traffic_bits(self, kind: str = "reach", states: int = 1,
+                     batch: Optional[int] = None) -> int:
+        """Wire size of the ONE collective (DESIGN.md Sec. 4).  All query
+        classes route through here so ``QueryStats.payload_bits`` stays
+        consistent across kinds.
+
+        Single query (``batch=None``) — the seed engine's assembled matrix:
 
         * ``reach`` / ``rpq``: Boolean payload, bitpacked into uint32 words
           — ``side * ceil(side/32) * 32`` bits with ``side = B * states``;
         * ``dist`` / ``bounded``: tropical payload — int32 distances do not
           bitpack, so the wire carries the full ``side * side * 32`` bits.
+
+        Fused sharded batch (``batch=N``, the ``dis_*_batch_sharded``
+        engines): the collective carries only the rows actually
+        contributed — the ``side = |V_f| * states`` query-independent
+        D0/W0 rows plus one s-row and one t-column row per query, each
+        ``side + 1`` wide (the extra column is the per-pair direct
+        answer).  Boolean payloads bitpack to
+        ``(side + 2N) * ceil((side+1)/32) * 32`` bits; the tropical wire
+        ships raw int32 — ``(side + 2N) * (side + 1) * 32`` bits — never
+        the ``B^2`` matrix per query.
         """
-        if kind in ("reach", "rpq"):
-            return self.packed_traffic_bits(states=states)
-        if kind in ("dist", "bounded"):
+        if kind not in ("reach", "dist", "bounded", "rpq"):
+            raise ValueError(f"unknown query kind {kind!r}; expected one of "
+                             "('reach', 'dist', 'bounded', 'rpq')")
+        if batch is None:
+            if kind in ("reach", "rpq"):
+                return self.packed_traffic_bits(states=states)
             side = self.B * states
             return side * side * 32
-        raise ValueError(f"unknown query kind {kind!r}; expected one of "
-                         "('reach', 'dist', 'bounded', 'rpq')")
+        side = self.n_boundary * states
+        rows, cols = side + 2 * batch, side + 1
+        if kind in ("reach", "rpq"):
+            from ..kernels.bitpack_ops.ops import packed_bits
+            return packed_bits(rows, cols)
+        return rows * cols * 32
 
     def largest_fragment(self) -> int:
         return int(self.frag_sizes.max())
@@ -248,6 +271,7 @@ class Fragmentation:
             report.reason = str(exc)
             return report
         self.g = g_new
+        self.arrays_version += 1
         return report
 
     def _updated_graph(self, delta: GraphDelta) -> Graph:
@@ -370,11 +394,13 @@ class Fragmentation:
     def _rebuild_in_place(self, g_new: Graph):
         """Re-fragment the updated graph with the same reserves and adopt
         the result, keeping this object's identity (callers hold refs)."""
+        version = self.arrays_version
         fresh = fragment_graph(g_new, self.part, self.k,
                                **(self.reserve or {}))
         for field in dataclasses.fields(self):
             setattr(self, field.name, getattr(fresh, field.name))
         self.rvset_cache = None
+        self.arrays_version = version + 1
 
 
 class _CapacityExceeded(Exception):

@@ -54,8 +54,9 @@ def connect(fr: Fragmentation, backend: str = "auto",
     ``backend``: ``"vmap"`` runs every fragment's localEval as one SPMD
     program on the host; ``"shard_map"`` places one fragment per device of
     ``mesh`` (built lazily when omitted) and keeps the one-collective
-    guarantee per fused batch; ``"auto"`` picks shard_map iff enough
-    devices exist for ``fr.k``.  ``cache``: ``"amortized"`` serves batches
+    guarantee per fused batch for all three query classes; ``"auto"``
+    picks shard_map iff enough devices exist for ``fr.k`` — judged against
+    ``mesh`` when one is passed.  ``cache``: ``"amortized"`` serves batches
     from the rvset/product caches (built lazily, shared with every other
     session on the same fragmentation); ``"none"`` evaluates each query
     with the seed one-shot engine and never builds cache state.
@@ -77,15 +78,25 @@ class QuerySession:
         self.fr = fr
         self.cache_mode = cache
         self._mesh = mesh
+        # an explicit mesh overrides the process device count: auto must
+        # not pick shard_map against a mesh that doesn't fit fr.k (nor
+        # vmap despite a fitting one).  The sharded engine maps one
+        # fragment per mesh device, so an explicit mesh fits iff its size
+        # EQUALS fr.k; without one, a fitting mesh is built lazily from
+        # the first fr.k process devices.
+        if mesh is not None:
+            fits = mesh.devices.size == fr.k
+            have = f"a {mesh.devices.size}-device mesh"
+        else:
+            fits = len(jax.devices()) >= fr.k
+            have = f"{len(jax.devices())} devices"
         if backend == "auto":
-            backend = ("shard_map"
-                       if fr.k > 1 and len(jax.devices()) >= fr.k else "vmap")
-        elif backend == "shard_map" and mesh is None \
-                and len(jax.devices()) < fr.k:
+            backend = "shard_map" if fr.k > 1 and fits else "vmap"
+        elif backend == "shard_map" and not fits:
             raise ValueError(
-                f"backend='shard_map' needs >= {fr.k} devices for "
-                f"{fr.k} fragments, have {len(jax.devices())}; use "
-                "backend='auto' to fall back to vmap")
+                f"backend='shard_map' needs one device per fragment "
+                f"({fr.k} fragments), have {have}; use backend='auto' "
+                "to fall back to vmap")
         self.backend = backend
         self.stats = SessionStats()
         self.last_plan: Optional[QueryPlan] = None
@@ -114,7 +125,12 @@ class QuerySession:
         collective ships only the changed bitpacked rows; otherwise (and
         for the cases the sharded path does not cover) the host repair
         runs.  Queries run after this see the new snapshot
-        (``cache_version`` is bumped)."""
+        (``cache_version`` is bumped).
+
+        The host cache is repaired even though sharded *answers* recompute
+        on-device: it stays the ``cache_version`` snapshot source and is
+        shared with vmap sessions/shims on this fragmentation, which would
+        otherwise read stale state (DESIGN.md Sec. 5, known trade-off)."""
         self.stats.updates += 1
         if self.backend == "shard_map" and self.fr.rvset_cache is not None:
             from . import distributed
@@ -183,29 +199,38 @@ class QuerySession:
 
     def _run_group_cached(self, group: ExecutionGroup, results) -> None:
         """One compiled batched execution for the whole group (padded to
-        the group's bucket size; pad answers are discarded)."""
+        the group's bucket size; pad answers are discarded).  On the
+        shard_map backend every kind routes through its one-collective
+        sharded batch engine, so the paper's guarantees survive fusion for
+        all three query classes (DESIGN.md Sec. 3.3)."""
         fr = self.fr
         pairs = group.pairs()
+        sharded = self.backend == "shard_map"
+        if sharded:
+            from . import distributed
+        stats = self._group_stats(group)
         if group.kind == "reach":
-            if self.backend == "shard_map":
-                from . import distributed
-                ans = distributed.dis_reach_batch_sharded(fr, pairs,
-                                                          mesh=self._mesh)
-            else:
-                ans = _cache.dis_reach_batch(fr, pairs)
-            for i, q, a in zip(group.indices, group.queries, ans):
-                results[i] = self._reach_result(q, a)
+            ans = (distributed.dis_reach_batch_sharded(fr, pairs,
+                                                       mesh=self._mesh)
+                   if sharded else _cache.dis_reach_batch(fr, pairs))
+            for i, q, a, st in zip(group.indices, group.queries, ans, stats):
+                results[i] = self._reach_result(q, a, st)
         elif group.kind == "dist":
             # exact distances once; each query's bound applies at answer
-            # extraction (this is what lets bounded + exact queries fuse).
-            # the tropical cache is host-resident on every backend.
-            d = _cache.dis_dist_batch(fr, pairs)
-            for i, q, di in zip(group.indices, group.queries, d):
-                results[i] = self._dist_result(q, int(di))
+            # extraction (this is what lets bounded + exact queries fuse)
+            d = (distributed.dis_dist_batch_sharded(fr, pairs,
+                                                    mesh=self._mesh)
+                 if sharded else _cache.dis_dist_batch(fr, pairs))
+            for i, q, di, st in zip(group.indices, group.queries, d, stats):
+                results[i] = self._dist_result(q, int(di), st)
         else:                                   # rpq
-            ans = _cache.dis_rpq_batch(fr, pairs, group.automaton)
-            for i, q, a in zip(group.indices, group.queries, ans):
-                results[i] = self._rpq_result(q, group.automaton, a)
+            ans = (distributed.dis_rpq_batch_sharded(fr, pairs,
+                                                     group.automaton,
+                                                     mesh=self._mesh)
+                   if sharded else _cache.dis_rpq_batch(fr, pairs,
+                                                        group.automaton))
+            for i, q, a, st in zip(group.indices, group.queries, ans, stats):
+                results[i] = self._rpq_result(q, group.automaton, a, st)
         self.stats.executions += 1
 
     def _run_group_uncached(self, group: ExecutionGroup, results) -> None:
@@ -222,18 +247,32 @@ class QuerySession:
                                       return_matrix=q.return_matrix)
             self.stats.executions += 1
 
-    def _reach_result(self, q: Reach, ans) -> QueryResult:
+    def _group_stats(self, group: ExecutionGroup) -> List[QueryStats]:
+        """Per-query stats whose SUM over the group is exact: a fused group
+        ships ONE collective of ``traffic_bits(kind, states, batch=padded)``
+        bits total (the padded batch is what actually rides the wire), so
+        the bits are amortized across the group's queries with an integer
+        fair split and the single collective round is stamped on the first
+        query — summing :class:`QueryStats` over any group then reports
+        the group's real wire cost instead of overstating it N-fold."""
         fr = self.fr
-        if q.s == q.t:
-            return QueryResult(True, 0, QueryStats(0, 0, fr.B, 1))
-        return QueryResult(bool(ans), None,
-                           QueryStats(fr.traffic_bits("reach"), 1, fr.B, 1))
+        states = 1 if group.automaton is None else group.automaton.n_states
+        total = fr.traffic_bits(group.kind, states=states,
+                                batch=group.padded_size)
+        n = group.n
+        return [QueryStats(total * (i + 1) // n - total * i // n,
+                           1 if i == 0 else 0, fr.B, states)
+                for i in range(n)]
 
-    def _dist_result(self, q: Dist, d: int) -> QueryResult:
-        fr = self.fr
+    def _reach_result(self, q: Reach, ans, stats: QueryStats) -> QueryResult:
+        if q.s == q.t:
+            return QueryResult(True, 0, stats)
+        return QueryResult(bool(ans), None, stats)
+
+    def _dist_result(self, q: Dist, d: int, stats: QueryStats) -> QueryResult:
         if q.s == q.t:
             ok = q.bound is None or 0 <= q.bound
-            return QueryResult(ok, 0, QueryStats(0, 0, fr.B, 1))
+            return QueryResult(ok, 0, stats)
         dist: Optional[int] = None if d < 0 else d
         reachable = dist is not None
         answer = (reachable if q.bound is None
@@ -241,18 +280,13 @@ class QuerySession:
         # match the seed path: a failed bounded query reports no distance
         if q.bound is not None and not answer:
             dist = None
-        return QueryResult(answer, dist,
-                           QueryStats(fr.traffic_bits("dist"), 1, fr.B, 1))
+        return QueryResult(answer, dist, stats)
 
-    def _rpq_result(self, q: Rpq, qa: QueryAutomaton, ans) -> QueryResult:
-        fr = self.fr
+    def _rpq_result(self, q: Rpq, qa: QueryAutomaton, ans,
+                    stats: QueryStats) -> QueryResult:
         if q.s == q.t:
-            return QueryResult(bool(qa.nullable), 0,
-                               QueryStats(0, 0, fr.B, qa.n_states))
-        return QueryResult(
-            bool(ans), None,
-            QueryStats(fr.traffic_bits("rpq", states=qa.n_states), 1, fr.B,
-                       qa.n_states))
+            return QueryResult(bool(qa.nullable), 0, stats)
+        return QueryResult(bool(ans), None, stats)
 
 
 # ---------------------------------------------------------------------------

@@ -115,6 +115,28 @@ def test_rpq_closure_cached_per_automaton():
     assert len(cache.rpq_closures) == 2
 
 
+def test_product_closure_eviction_is_lru_not_fifo(monkeypatch):
+    """A cache hit must refresh recency: a server alternating
+    MAX_RPQ_CLOSURES + 1 regexes with one hot one must keep the hot
+    closure instead of rebuilding it on every query (FIFO would evict the
+    oldest-*inserted*, i.e. the hot one)."""
+    from repro.core import cache as cache_mod
+    monkeypatch.setattr(cache_mod, "MAX_RPQ_CLOSURES", 2)
+    g, fr = _case(16, 40, 2, 4)
+    qa_hot = build_query_automaton("0*", lambda x: int(x))
+    qa_b = build_query_automaton("1*", lambda x: int(x))
+    qa_c = build_query_automaton("2*", lambda x: int(x))
+    c_hot = cache_mod.product_closure(fr, qa_hot)
+    cache_mod.product_closure(fr, qa_b)
+    # hit the hot automaton: same object back, recency refreshed
+    assert cache_mod.product_closure(fr, qa_hot) is c_hot
+    cache_mod.product_closure(fr, qa_c)      # evicts qa_b (LRU), not hot
+    keys = set(fr.rvset_cache.rpq_closures)
+    assert qa_hot.cache_key() in keys and qa_c.cache_key() in keys
+    assert qa_b.cache_key() not in keys
+    assert cache_mod.product_closure(fr, qa_hot) is c_hot  # never rebuilt
+
+
 # ---------------------------------------------------------------------------
 # cache mechanics + stats
 # ---------------------------------------------------------------------------

@@ -24,11 +24,16 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, re, sys
 sys.path.insert(0, "__SRC__")
+sys.path.insert(0, "__TESTS__")
 import numpy as np
 from repro.graph import erdos_renyi, random_partition
 from repro.core import fragment_graph, build_query_automaton
 from repro.core.distributed import (dis_reach_sharded, dis_reach_batch_sharded,
-                                    dis_rpq_sharded, lower_reach_hlo)
+                                    dis_dist_batch_sharded,
+                                    dis_rpq_batch_sharded,
+                                    dis_rpq_sharded, lower_batch_hlo,
+                                    lower_reach_hlo)
+from oracles import oracle_rpq
 import networkx as nx
 
 g = erdos_renyi(48, 140, n_labels=4, seed=5)
@@ -36,6 +41,12 @@ part = random_partition(g, 8, seed=2)
 fr = fragment_graph(g, part, 8)
 G = nx.DiGraph(); G.add_nodes_from(range(g.n))
 G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+
+def nx_dist(s, t):
+    try:
+        return nx.shortest_path_length(G, s, t)
+    except nx.NetworkXNoPath:
+        return -1
 
 rng = np.random.default_rng(0)
 ok = True
@@ -50,6 +61,16 @@ batch = dis_reach_batch_sharded(fr, pairs)
 ok_batch = all(bool(a) == nx.has_path(G, s, t)
                for (s, t), a in zip(pairs, batch))
 
+# batched sharded dist + RPQ: ONE collective each, answers vs oracles
+qa_b = build_query_automaton("(0|1)* 2", lambda x: int(x))
+dpairs = pairs[:8]
+dbatch = dis_dist_batch_sharded(fr, dpairs)
+ok_dist = all(int(d) == (0 if s == t else nx_dist(s, t))
+              for (s, t), d in zip(dpairs, dbatch))
+rbatch = dis_rpq_batch_sharded(fr, dpairs, qa_b)
+ok_rpq_batch = all(bool(a) == oracle_rpq(g, s, t, qa_b)
+                   for (s, t), a in zip(dpairs, rbatch))
+
 # adversarial for the packed collective: chain graph, round-robin partition
 # -> every node is boundary, paths are unique, and packed words mix bits
 # owned by different fragments (any dropped bit flips an answer)
@@ -60,6 +81,10 @@ frc = fragment_graph(gc, (np.arange(nc) % kc).astype(np.int32), kc)
 cpairs = [(0, nc - 1), (5, 60), (10, 11), (63, 0), (30, 30), (2, 50)]
 cbatch = dis_reach_batch_sharded(frc, cpairs)
 ok_batch &= all(bool(a) == (s <= t) for (s, t), a in zip(cpairs, cbatch))
+# tropical twin: unique path lengths make any merged-wire error visible
+cdist = dis_dist_batch_sharded(frc, cpairs)
+ok_dist &= all(int(d) == (t - s if s <= t else -1)
+               for (s, t), d in zip(cpairs, cdist))
 
 # degenerate: single fragment, no boundary nodes at all
 g1 = erdos_renyi(12, 30, seed=2)
@@ -73,28 +98,59 @@ ok_batch &= all(bool(a) == nx.has_path(G1, s, t) for (s, t), a in zip(p1, b1))
 qa = build_query_automaton("(0|1|2|3)*", lambda x: int(x))
 ans_rpq = dis_rpq_sharded(fr, 0, 17, qa)
 
+COLL_RE = (r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|"
+           r"all_to_all|collective_permute)[a-z_]*")
+
+def scan(hlo):
+    matches = list(re.finditer(COLL_RE, hlo))
+    # the collective's operand/result types live within the op's text window
+    return ([m.group(0) for m in matches],
+            [hlo[m.start():m.start() + 800] for m in matches])
+
 hlo = lower_reach_hlo(fr, 0, 17)
-matches = list(re.finditer(
-    r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|all_to_all|"
-    r"collective_permute)[a-z_]*", hlo))
-colls = [m.group(0) for m in matches]
-# the collective's operand/result types live within the op's text window
-spans = [hlo[m.start():m.start() + 800] for m in matches]
+colls, spans = scan(hlo)
 packed = all("ui32" in s for s in spans)
 W = (fr.B + 31) // 32
 shape = f"{fr.B}x{W}xui32"
 payload_shape_ok = any(shape in s for s in spans)
+
+# batched HLO, all three kinds: one collective per fused group, payload
+# typed [side + 2N, side + 1] (bitpacked ui32 for reach/rpq, raw i32 for
+# the tropical wire)
+N, nb = 8, fr.n_boundary
+side_q = nb * qa_b.n_states
+batch_hlo = {
+    "reach": (lower_batch_hlo(fr, dpairs, "reach"),
+              f"{nb + 2 * N}x{(nb + 1 + 31) // 32}xui32"),
+    "dist": (lower_batch_hlo(fr, dpairs, "dist"),
+             f"{nb + 2 * N}x{nb + 1}xi32"),
+    "rpq": (lower_batch_hlo(fr, dpairs, "rpq", qa=qa_b),
+            f"{side_q + 2 * N}x{(side_q + 1 + 31) // 32}xui32"),
+}
+batch_report = {}
+for kind, (bh, want_shape) in batch_hlo.items():
+    bcolls, bspans = scan(bh)
+    batch_report[kind] = {
+        "collectives": bcolls,
+        "payload_shape_ok": any(want_shape in s for s in bspans),
+    }
+
 print(json.dumps({"ok": bool(ok), "ok_batch": bool(ok_batch),
+                  "ok_dist": bool(ok_dist),
+                  "ok_rpq_batch": bool(ok_rpq_batch),
                   "collectives": colls, "rpq": bool(ans_rpq),
                   "packed": bool(packed),
-                  "payload_shape_ok": bool(payload_shape_ok)}))
+                  "payload_shape_ok": bool(payload_shape_ok),
+                  "batch": batch_report}))
 """
 
 
 @pytest.fixture(scope="module")
 def sharded_report():
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    code = _SUBPROC.replace("__SRC__", os.path.abspath(src))
+    here = os.path.dirname(__file__)
+    src = os.path.join(here, "..", "src")
+    code = (_SUBPROC.replace("__SRC__", os.path.abspath(src))
+            .replace("__TESTS__", os.path.abspath(here)))
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
@@ -122,6 +178,25 @@ def test_batched_sharded_engine_correct(sharded_report):
     """dis_reach_batch_sharded: N pairs, one packed collective, answers
     match the oracle."""
     assert sharded_report["ok_batch"], sharded_report
+
+
+def test_batched_sharded_dist_and_rpq_correct(sharded_report):
+    """dis_dist_batch_sharded / dis_rpq_batch_sharded answers match the
+    oracles — incl. the all-boundary chain whose unique path lengths expose
+    any error in the merged tropical wire."""
+    assert sharded_report["ok_dist"], sharded_report
+    assert sharded_report["ok_rpq_batch"], sharded_report
+
+
+@pytest.mark.parametrize("kind", ["reach", "dist", "rpq"])
+def test_one_collective_per_fused_batch_all_kinds(sharded_report, kind):
+    """The one-collective guarantee survives batching for ALL THREE query
+    classes: the fused N-pair program lowers to exactly one collective
+    whose payload is [side + 2N, side + 1] — bitpacked ui32 words for the
+    Boolean kinds, raw i32 rows for the tropical wire."""
+    rep = sharded_report["batch"][kind]
+    assert len(rep["collectives"]) == 1, rep
+    assert rep["payload_shape_ok"], rep
 
 
 def test_traffic_independent_of_graph_size():

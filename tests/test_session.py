@@ -218,16 +218,66 @@ def test_traffic_bits_consistent_across_kinds():
         side * ((side + 31) // 32) * 32
     with pytest.raises(ValueError, match="unknown query kind"):
         fr.traffic_bits("nope")
+    with pytest.raises(ValueError, match="unknown query kind"):
+        fr.traffic_bits("nope", batch=8)
     # every query class reports through the one helper
     assert dis_reach(fr, 0, 1).stats.payload_bits == fr.traffic_bits("reach")
     assert dis_dist(fr, 0, 1).stats.payload_bits == fr.traffic_bits("dist")
     assert dis_rpq(fr, 0, 1, qa).stats.payload_bits == \
         fr.traffic_bits("rpq", states=qa.n_states)
+    # fused-batch wire format: side + 2N rows of side + 1 (the direct
+    # column); Boolean kinds bitpack, the tropical wire ships raw int32
+    nb, N = fr.n_boundary, 8
+    assert fr.traffic_bits("reach", batch=N) == \
+        (nb + 2 * N) * ((nb + 1 + 31) // 32) * 32
+    assert fr.traffic_bits("dist", batch=N) == (nb + 2 * N) * (nb + 1) * 32
+    sq = nb * qa.n_states
+    assert fr.traffic_bits("rpq", states=qa.n_states, batch=N) == \
+        (sq + 2 * N) * ((sq + 1 + 31) // 32) * 32
+
+
+def test_group_traffic_sums_to_one_collective_vmap():
+    """Per-group stats amortize the group's ONE collective: summed
+    payload_bits over every fused group equal the wire size of that
+    group's single collective, and exactly one collective round is
+    reported per group (not one per query)."""
+    g, fr = _case(20, 55, 3, 9)
+    sess = repro.connect(fr, backend="vmap")
+    qa = _automaton(REGEXES[0])
+    queries = [Reach(0, 5), Reach(3, 3), Reach(1, 2), Dist(0, 7),
+               Dist(2, 2, bound=1), Rpq(4, 9, automaton=qa),
+               Rpq(5, 5, automaton=qa), Dist(6, 1, bound=3)]
+    results = sess.run(queries)
+    for grp in sess.last_plan.groups:
+        states = 1 if grp.automaton is None else grp.automaton.n_states
+        want = fr.traffic_bits(grp.kind, states=states,
+                               batch=grp.padded_size)
+        assert sum(results[i].stats.payload_bits
+                   for i in grp.indices) == want, grp.kind
+        assert sum(results[i].stats.collective_rounds
+                   for i in grp.indices) == 1, grp.kind
 
 
 # ---------------------------------------------------------------------------
 # server: rpq kind, submit validation, batches spanning a delta
 # ---------------------------------------------------------------------------
+
+def test_sharded_device_inputs_memoized_until_delta():
+    """The batched sharded engines' device uploads (edge lists + boundary
+    gathers) are built once per fragmentation state: repeat batches reuse
+    the memo, and an apply_delta (which mutates the host arrays in place)
+    invalidates it via arrays_version."""
+    from repro.core import distributed
+    g, fr = _case(16, 40, 2, 3)
+    m1 = distributed._device_inputs(fr)
+    assert distributed._device_inputs(fr) is m1       # steady state: reused
+    v0 = fr.arrays_version
+    fr.apply_delta(GraphDelta.insert([(0, 1)]))
+    assert fr.arrays_version == v0 + 1
+    m2 = distributed._device_inputs(fr)
+    assert m2 is not m1 and m2["version"] == fr.arrays_version
+    assert distributed._device_inputs(fr) is m2
+
 
 def test_server_submit_validates_kind_and_args():
     g, fr = _case(10, 20, 2, 6)
@@ -313,8 +363,11 @@ sys.path.insert(0, "__SRC__")
 sys.path.insert(0, "__TESTS__")
 import numpy as np
 import repro
-from repro.core import Dist, Reach, Rpq, build_query_automaton, fragment_graph
+from repro.core import (Dist, GraphDelta, Reach, Rpq, build_query_automaton,
+                        fragment_graph)
+from repro.core.distributed import fragment_mesh
 from repro.graph import erdos_renyi, random_partition
+from repro.serve import QueryServer
 from oracles import oracle_dist, oracle_reach, oracle_rpq
 
 g = erdos_renyi(40, 120, n_labels=3, seed=7)
@@ -323,7 +376,7 @@ sess = repro.connect(fr)                      # auto -> shard_map on 8 devs
 qa = build_query_automaton("(0|1)*", lambda x: int(x))
 rng = np.random.default_rng(2)
 queries, want = [], []
-for _ in range(10):
+for _ in range(12):
     s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
     kind = int(rng.integers(3))
     if kind == 0:
@@ -336,13 +389,88 @@ for _ in range(10):
 res = sess.run(queries)
 got = [r.distance if isinstance(q, Dist) else r.answer
        for q, r in zip(queries, res)]
+kinds_seen = sorted({grp.kind for grp in sess.last_plan.groups})
+
+# summed per-group QueryStats == the wire of the group's ONE collective
+bits_ok = True
+for grp in sess.last_plan.groups:
+    states = 1 if grp.automaton is None else grp.automaton.n_states
+    total = fr.traffic_bits(grp.kind, states=states, batch=grp.padded_size)
+    bits_ok &= sum(res[i].stats.payload_bits for i in grp.indices) == total
+    bits_ok &= sum(res[i].stats.collective_rounds for i in grp.indices) == 1
+
+# backend='auto' judges shard_map-vs-vmap against an explicit mesh, not
+# the process device count (8 devices here, mesh of 2): shard_map needs
+# the mesh to fit fr.k exactly (one device per fragment), so both a
+# too-small and a too-big mesh must fall back / refuse instead of
+# crashing inside the engine
+mesh2 = fragment_mesh(2)
+mesh4 = fragment_mesh(4)
+fr4 = fragment_graph(g, random_partition(g, 4, 0), 4)
+fr2 = fragment_graph(g, random_partition(g, 2, 0), 2)
+auto_small_mesh = repro.connect(fr4, mesh=mesh2).backend     # must be vmap
+auto_big_mesh = repro.connect(fr2, mesh=mesh4).backend       # must be vmap
+auto_fit_mesh = repro.connect(fr2, mesh=mesh2).backend  # must be shard_map
+try:
+    repro.connect(fr2, backend="shard_map", mesh=mesh4)
+    big_mesh_raises = False
+except ValueError:
+    big_mesh_raises = True
+sess2 = repro.connect(fr2, mesh=mesh2)
+res2 = sess2.run([Reach(0, 5), Dist(1, 7), Rpq(2, 9, automaton=qa)])
+mesh_ok = (res2[0].answer == oracle_reach(g, 0, 5)
+           and res2[1].distance == oracle_dist(g, 1, 7)
+           and res2[2].answer == oracle_rpq(g, 2, 9, qa))
+
+# server over the shard_map backend: a mixed batch of all three kinds
+# spanning a submit_delta answers each side against its own snapshot
+gs = erdos_renyi(24, 40, n_labels=3, seed=8)
+frs = fragment_graph(gs, random_partition(gs, 4, 3), 4,
+                     reserve_boundary=8, reserve_edges=16, reserve_stubs=8)
+srv = QueryServer(frs, batch_size=16)
+qa2 = build_query_automaton("(0|1|2)*", lambda x: int(x))
+pairs = [(int(rng.integers(gs.n)), int(rng.integers(gs.n)))
+         for _ in range(4)]
+def submit_all():
+    return ([srv.submit(s, t) for s, t in pairs]
+            + [srv.submit(s, t, kind="dist") for s, t in pairs]
+            + [srv.submit(s, t, kind="rpq", automaton=qa2)
+               for s, t in pairs])
+def want_all(gg):
+    return ([oracle_reach(gg, s, t) for s, t in pairs]
+            + [oracle_dist(gg, s, t) for s, t in pairs]
+            + [oracle_rpq(gg, s, t, qa2) for s, t in pairs])
+pre = submit_all()
+pre_want = want_all(gs)
+upd = srv.submit_delta(GraphDelta.insert(
+    [(int(rng.integers(gs.n)), int(rng.integers(gs.n))) for _ in range(3)]))
+post = submit_all()
+srv.drain()
+post_want = want_all(frs.g)                   # post-delta graph
+v_pre = {r.cache_version for r in pre}
+v_post = {r.cache_version for r in post}
+server_ok = ([r.result for r in pre] == pre_want
+             and [r.result for r in post] == post_want
+             and len(v_pre) == 1 and len(v_post) == 1
+             and v_post.pop() > v_pre.pop())
+
 print(json.dumps({"backend": sess.backend, "ok": got == want,
+                  "kinds": kinds_seen, "bits_ok": bool(bits_ok),
                   "groups": sess.last_plan.n_groups,
-                  "executions": sess.stats.executions}))
+                  "executions": sess.stats.executions,
+                  "auto_small_mesh": auto_small_mesh,
+                  "auto_big_mesh": auto_big_mesh,
+                  "auto_fit_mesh": auto_fit_mesh,
+                  "big_mesh_raises": bool(big_mesh_raises),
+                  "mesh_ok": bool(mesh_ok),
+                  "server_backend": srv.session.backend,
+                  "update_mode": upd.result.mode,
+                  "server_ok": bool(server_ok)}))
 """
 
 
-def test_session_shard_map_mixed_batch_subprocess():
+@pytest.fixture(scope="module")
+def shard_map_report():
     here = os.path.dirname(__file__)
     code = (_SUBPROC
             .replace("__SRC__", os.path.abspath(os.path.join(here, "..",
@@ -351,7 +479,43 @@ def test_session_shard_map_mixed_batch_subprocess():
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
-    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_session_shard_map_mixed_batch_subprocess(shard_map_report):
+    rep = shard_map_report
     assert rep["backend"] == "shard_map"
     assert rep["ok"], rep
     assert rep["executions"] == rep["groups"]
+    # the random draw produced all three kinds -> all three sharded paths ran
+    assert rep["kinds"] == ["dist", "reach", "rpq"], rep
+
+
+def test_shard_map_group_traffic_sums_to_one_collective(shard_map_report):
+    """Summed QueryStats over any fused shard_map group equals the wire
+    size of that group's single collective (one round per group)."""
+    assert shard_map_report["bits_ok"], shard_map_report
+
+
+def test_auto_backend_respects_explicit_mesh(shard_map_report):
+    """backend='auto' with an explicit mesh decides from the mesh's device
+    count: a 2-device mesh must refuse shard_map for 4 fragments (even with
+    8 process devices) and pick it for 2; a mesh larger than fr.k must fall
+    back to vmap (auto) or raise up front (explicit) instead of crashing
+    inside the sharded engine."""
+    rep = shard_map_report
+    assert rep["auto_small_mesh"] == "vmap", rep
+    assert rep["auto_big_mesh"] == "vmap", rep
+    assert rep["auto_fit_mesh"] == "shard_map", rep
+    assert rep["big_mesh_raises"], rep
+    assert rep["mesh_ok"], rep
+
+
+def test_server_shard_map_mixed_batch_spanning_delta(shard_map_report):
+    """QueryServer on the shard_map backend: all three kinds in one drain,
+    split across a submit_delta, answer against their own snapshots."""
+    rep = shard_map_report
+    assert rep["server_backend"] == "shard_map", rep
+    assert rep["server_ok"], rep
+    assert rep["update_mode"] in ("repair_sharded", "repair", "recompute",
+                                  "rebuild"), rep
