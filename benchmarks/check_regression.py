@@ -24,7 +24,12 @@ shipping in an artifact:
   ``payload_bits_ok`` (summed per-group QueryStats == the wire size of
   each group's single collective), and the fast-run shard_map per-query
   cost must not exceed 3x the committed value (fake-device collectives on
-  one CPU are noisier than the vmap path, hence the looser factor).
+  one CPU are noisier than the vmap path, hence the looser factor);
+* k >> d scale-out (``BENCH_pr6``): every packing factor row (k fragments
+  on 8 devices) in both runs must report ``answers_match`` and
+  ``payload_bits_ok`` — packing must change neither answers nor the wire
+  — and the fast run's densest-packing per-query cost must not exceed 3x
+  the committed value.
 
 Exits non-zero with a FAIL line per violated bound.
 """
@@ -133,6 +138,32 @@ def main(argv=None) -> int:
         "shard_map_per_query_us",
         sh_fast <= SHARDED_REGRESSION_FACTOR * sh_base,
         f"fast {sh_fast:.1f}us vs committed {sh_base:.1f}us "
+        f"(limit {SHARDED_REGRESSION_FACTOR}x)",
+    )
+
+    base6 = _load(f"{root}/BENCH_pr6.json")
+    fast6 = _load(f"{root}/BENCH_pr6.fast.json")
+    for tag, rep in (("committed", base6), ("fast", fast6)):
+        for row in rep["rows"]:
+            label = f"k={row['k']} fpd={row['fragments_per_device']}"
+            check(
+                f"scaleout answers_match ({tag}, {label})",
+                row["answers_match"],
+                "packed shard_map answers == vmap answers",
+            )
+            check(
+                f"scaleout payload_bits_ok ({tag}, {label})",
+                row["payload_bits_ok"],
+                "summed group QueryStats == one-collective wire size",
+            )
+    dense_base = max(base6["rows"], key=lambda r: r["fragments_per_device"])
+    dense_fast = max(fast6["rows"], key=lambda r: r["fragments_per_device"])
+    check(
+        "scaleout per_query_us (densest packing)",
+        dense_fast["per_query_us"]
+        <= SHARDED_REGRESSION_FACTOR * dense_base["per_query_us"],
+        f"fast {dense_fast['per_query_us']:.1f}us vs committed "
+        f"{dense_base['per_query_us']:.1f}us "
         f"(limit {SHARDED_REGRESSION_FACTOR}x)",
     )
 

@@ -466,6 +466,106 @@ def exp_sharded_mixed(n: int = 400, m: int = 1600, k: int = 8,
     return res
 
 
+_SCALEOUT_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(d)d"
+import json, sys, time
+sys.path.insert(0, %(src)r)
+import numpy as np
+import repro
+from repro.core import Dist, Reach, Rpq, build_query_automaton, fragment_graph
+from repro.graph.graph import Graph
+
+d, n, m, n_q = %(d)d, %(n)d, %(m)d, %(n_q)d
+ks = %(ks)r
+rows = []
+for k in ks:
+    # same locality workload as the sharded-mixed benchmark, refragmented
+    # at each k: the graph is cut for locality, the mesh stays at d devices
+    rng = np.random.default_rng(k)
+    per = n // k
+    src, dst = [], []
+    for _ in range(m):
+        if rng.random() < 0.92:
+            b = int(rng.integers(k))
+            src.append(b * per + int(rng.integers(per)))
+            dst.append(b * per + int(rng.integers(per)))
+        else:
+            src.append(int(rng.integers(n)))
+            dst.append(int(rng.integers(n)))
+    g = Graph(n, np.array(src), np.array(dst),
+              rng.integers(0, 8, n).astype(np.int32))
+    part = np.minimum(np.arange(n) // per, k - 1).astype(np.int32)
+    fr = fragment_graph(g, part, k)
+    qa = build_query_automaton("(0|1)* 2", lambda x: int(x))
+    queries = []
+    for i in range(n_q):
+        s, t = int(rng.integers(n)), int(rng.integers(n))
+        queries.append([Reach(s, t), Dist(s, t),
+                        Rpq(s, t, automaton=qa)][i %% 3])
+
+    res_v = repro.connect(fr, backend="vmap").run(queries)
+    sess = repro.connect(fr)            # auto -> shard_map, k packed on d
+    res = sess.run(queries)             # builds caches + compiles groups
+    reps = 3
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        res = sess.run(queries)
+    us = (time.perf_counter() - t0) / reps / n_q * 1e6
+
+    match = all((a.answer, a.distance) == (b.answer, b.distance)
+                for a, b in zip(res_v, res))
+    wire = {}
+    bits_ok = True
+    for grp in sess.last_plan.groups:
+        states = 1 if grp.automaton is None else grp.automaton.n_states
+        total = fr.traffic_bits(grp.kind, states=states,
+                                batch=grp.padded_size)
+        wire[grp.kind] = wire.get(grp.kind, 0) + total
+        bits_ok &= sum(res[i].stats.payload_bits
+                       for i in grp.indices) == total
+        bits_ok &= sum(res[i].stats.collective_rounds
+                       for i in grp.indices) == 1
+    rows.append(dict(k=k, fragments_per_device=sess.placement.fpd,
+                     boundary=fr.n_boundary, backend=sess.backend,
+                     per_query_us=us, queries_per_sec=1e6 / us,
+                     wire_bits_per_kind=wire,
+                     wire_bits_total=sum(wire.values()),
+                     answers_match=bool(match),
+                     payload_bits_ok=bool(bits_ok)))
+print(json.dumps(dict(d=d, n=n, m=m, n_queries=n_q, rows=rows)))
+"""
+
+
+def exp_scaleout(n: int = 400, m: int = 1600, d: int = 8,
+                 ks=(8, 16, 32), n_q: int = 48) -> Dict:
+    """Beyond-paper experiment (ISSUE 6): k >> d scale-out — the mesh
+    stays at ``d`` fake devices while the graph is refragmented at
+    growing ``k``, so fragments-per-device goes 1, 2, 4, ...  Reports
+    mixed-batch queries/sec and the per-kind wire bits of the fused
+    collectives at each packing factor, and asserts at every k that
+    shard_map answers == vmap answers and that summed per-group
+    ``QueryStats`` equal each group's one-collective wire (packing adds
+    zero traffic)."""
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = _SCALEOUT_SUBPROC % dict(src=src, d=d, n=n, m=m,
+                                    ks=tuple(ks), n_q=n_q)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError("exp_scaleout subprocess failed:\n"
+                           + out.stderr[-2000:])
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    for row in res["rows"]:
+        assert row["backend"] == "shard_map", row
+        assert row["fragments_per_device"] == -(-row["k"] // d), row
+        assert row["answers_match"], f"k={row['k']}: answers diverged"
+        assert row["payload_bits_ok"], \
+            f"k={row['k']}: group stats != one-collective wire size"
+    return res
+
+
 def exp4_mapreduce(n: int = 800, m: int = 3200, k: int = 4) -> List[Dict]:
     g = erdos_renyi(n, m, n_labels=8, seed=5)
     fr = fragment_graph(g, random_partition(g, k, 5), k)

@@ -141,8 +141,27 @@ def main() -> None:
             incremental)
     section("# ISSUE-4: unified session, mixed-kind fused batches",
             session_bench)
+    def scaleout():
+        res = pe.exp_scaleout(n=int(320 * scale) + 80,
+                              m=int(1280 * scale) + 320,
+                              n_q=24 if fast else 48)
+        for row in res["rows"]:
+            print(f"scaleout/k{row['k']}_fpd{row['fragments_per_device']},"
+                  f"{row['per_query_us']:.1f},"
+                  f"qps={row['queries_per_sec']:.0f};"
+                  f"wire_bits={row['wire_bits_total']};"
+                  f"answers_match={row['answers_match']};"
+                  f"payload_bits_ok={row['payload_bits_ok']}")
+        out = "BENCH_pr6" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "scaleout_fragments_per_device",
+                       "fast_mode": fast, **res}, f, indent=2)
+        print(f"# wrote {out}")
+
     section("# ISSUE-5: sharded one-collective batches, all query kinds",
             sharded_mixed)
+    section("# ISSUE-6: k >> d scale-out, fragments packed per device",
+            scaleout)
 
     if failures:
         print(f"# FAILED sections ({len(failures)}): {failures}",

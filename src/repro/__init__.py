@@ -19,8 +19,9 @@ fuses mixed batches into one compiled execution per (kind, automaton)
 group, and keeps everything valid under graph deltas
 (``session.apply(delta)``).  See DESIGN.md Sec. 5.
 """
+from .core.fragments import Placement
 from .core.plan import Dist, Query, QueryResult, Reach, Rpq
 from .core.session import QuerySession, connect
 
 __all__ = ["connect", "QuerySession", "QueryResult",
-           "Reach", "Dist", "Rpq", "Query"]
+           "Reach", "Dist", "Rpq", "Query", "Placement"]

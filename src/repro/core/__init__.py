@@ -14,7 +14,7 @@ from .api import (QueryResult, dis_dist, dis_dist_batch, dis_dist_cached,
 from .automaton import QueryAutomaton, accepts, build_query_automaton
 from .cache import RvsetCache, get_rvset_cache, prepare_rvset_cache
 from .engine import INF, QueryStats
-from .fragments import (DeltaReport, Fragmentation, GraphDelta,
+from .fragments import (DeltaReport, Fragmentation, GraphDelta, Placement,
                         fragment_graph, query_slots)
 from .incremental import UpdateStats, apply_delta
 from .plan import Dist, ExecutionGroup, Query, QueryPlan, Reach, Rpq
@@ -27,7 +27,7 @@ __all__ = [
     "RvsetCache", "prepare_rvset_cache", "get_rvset_cache",
     "QueryAutomaton", "accepts", "build_query_automaton",
     "INF", "QueryStats", "Fragmentation", "fragment_graph", "query_slots",
-    "GraphDelta", "DeltaReport", "apply_delta", "UpdateStats",
+    "GraphDelta", "DeltaReport", "Placement", "apply_delta", "UpdateStats",
     "Reach", "Dist", "Rpq", "Query", "QueryPlan", "ExecutionGroup",
     "QuerySession", "SessionStats", "connect",
 ]

@@ -260,6 +260,59 @@ def local_stage_rpq(esrc, edst, src_local, src_row, tgt_local, labels, gids,
     return d0, sb.reshape(N, nb * Q), direct, tc.reshape(N, nb * Q)
 
 
+# -- packed variants: one device owning SEVERAL fragments (k >> d) ----------
+#
+# Each wrapper vmaps its per-fragment stage over the leading owned-fragments
+# axis (fpd) and merges the contributions on-device — OR for the Boolean
+# kinds, min for the tropical one.  The merge is exact for the same reason
+# the cross-device collective is: every d0/sb row and tc column is computed
+# by exactly one fragment (the others contribute the semiring zero), and
+# ownership stays disjoint whether fragments sit on different devices or
+# share one.  Inert pad fragments (pad-only edge lists, all-false ownership
+# masks, absent s/t slots) contribute zeros/INF and their propagations
+# converge in zero while_loop iterations, so short devices cost nothing.
+
+def local_stage_reach_packed(esrc, edst, src_local, s_slot, t_slot, srcidx,
+                             own, tgt_mine, *, n_max: int):
+    """:func:`local_stage_reach` for a device owning ``fpd`` fragments —
+    every argument gains a leading ``[fpd, ...]`` axis; the returned
+    ``(d0, sb, direct, tc)`` are OR-merged over it (shapes as unpacked)."""
+    d0, sb, direct, tc = jax.vmap(
+        functools.partial(local_stage_reach, n_max=n_max))(
+        esrc, edst, src_local, s_slot, t_slot, srcidx, own, tgt_mine)
+    return (jnp.any(d0, axis=0), jnp.any(sb, axis=0),
+            jnp.any(direct, axis=0), jnp.any(tc, axis=0))
+
+
+def local_stage_dist_packed(esrc, edst, src_local, s_slot, t_slot, srcidx,
+                            own, tgt_mine, *, n_max: int):
+    """Tropical twin of :func:`local_stage_reach_packed`: min-merge over
+    the owned-fragments axis (non-owners ship INF, the tropical zero)."""
+    w0, sb, direct, tc = jax.vmap(
+        functools.partial(local_stage_dist, n_max=n_max))(
+        esrc, edst, src_local, s_slot, t_slot, srcidx, own, tgt_mine)
+    return (jnp.min(w0, axis=0), jnp.min(sb, axis=0),
+            jnp.min(direct, axis=0), jnp.min(tc, axis=0))
+
+
+def local_stage_rpq_packed(esrc, edst, src_local, src_row, tgt_local, labels,
+                           gids, q_labels, q_trans, q_start, s_slot, t_slot,
+                           s_gids, t_gids, local_b, mine, *, n_max: int,
+                           B: int):
+    """:func:`local_stage_rpq` over the owned-fragments axis.  Per-fragment
+    arguments carry ``[fpd, ...]``; the automaton (``q_*``), the pair gids
+    and ``local_b`` stay replicated."""
+    d0, sb, direct, tc = jax.vmap(
+        functools.partial(local_stage_rpq, n_max=n_max, B=B),
+        in_axes=(0, 0, 0, 0, 0, 0, 0, None, None, None, 0, 0, None, None,
+                 None, 0))(
+        esrc, edst, src_local, src_row, tgt_local, labels, gids,
+        q_labels, q_trans, q_start, s_slot, t_slot, s_gids, t_gids,
+        local_b, mine)
+    return (jnp.any(d0, axis=0), jnp.any(sb, axis=0),
+            jnp.any(direct, axis=0), jnp.any(tc, axis=0))
+
+
 # ---------------------------------------------------------------------------
 # batched per-query phase (one jitted call for N pairs)
 # ---------------------------------------------------------------------------

@@ -1,8 +1,10 @@
-"""shard_map engine: one fragment per device (or device group).
+"""shard_map engine: fragments packed onto a device mesh (d <= k).
 
-This is the production path: fragments live sharded across the mesh, each
-device runs localEval on its own fragment with *zero* communication, then a
-single collective assembles the dependency matrix, and evalDG runs
+This is the production path: a :class:`~repro.core.fragments.Placement`
+maps every fragment to a mesh device (several fragments per device when
+``k > d``); each device runs localEval on its owned fragments with *zero*
+communication — a vmap over the owned-fragments axis, merged on-device —
+then a single collective assembles the dependency matrix, and evalDG runs
 replicated (see DESIGN.md Sec. 2 for why replication beats a coordinator on
 a torus).
 
@@ -36,7 +38,7 @@ from . import engine
 from ..kernels.bitpack_ops.ops import pack_payload, unpack_payload
 from .automaton import QueryAutomaton
 from .bes import bool_closure, tropical_closure
-from .fragments import Fragmentation, query_slots
+from .fragments import Fragmentation, Placement, query_slots
 
 # jax.shard_map moved to the top level after 0.4.x; support both.  The
 # experimental version cannot prove replication through while loops, so it
@@ -196,18 +198,21 @@ def lower_reach_hlo(fr: Fragmentation, s: int, t: int,
 #
 # Shared structure (the local stage lives in core.cache.local_stage_*, the
 # combine in core.cache.combine_*, so both backends evolve together): each
-# device runs its own fragment's query-independent rows (D0 / W0 / product
-# rvset) plus the per-pair s-rows, direct entries, and t-column entries it
-# owns, concatenates everything into ONE payload of shape
-# [side + 2N, side + 1] (side = nb, or nb*|Q| for RPQs; the extra column
-# carries the per-pair direct answer), and a single collective merges it:
-# psum over bitpacked uint32 words for the Boolean payloads (no carries —
-# every bit is computed on exactly one device: d0/sb rows by their owner,
-# tc[:, u] by frag(u)), pmin over raw int32 for the tropical wire (exact
-# because non-owners ship INF).  Closure + combine run replicated, exactly
-# like evalDG.  The compiled programs are cached per (mesh, geometry, N)
-# so steady-state batches neither retrace nor recompile, and survive
-# in-place deltas (all fragment data is passed as arguments, none baked in).
+# device runs its owned fragments' query-independent rows (D0 / W0 /
+# product rvset) plus the per-pair s-rows, direct entries, and t-column
+# entries they own — vmapped over the owned-fragments axis and OR/min-
+# merged on-device (core.cache.local_stage_*_packed) — concatenates
+# everything into ONE payload of shape [side + 2N, side + 1] (side = nb,
+# or nb*|Q| for RPQs; the extra column carries the per-pair direct
+# answer), and a single collective merges it: psum over bitpacked uint32
+# words for the Boolean payloads (no carries — every bit is computed on
+# exactly one device: d0/sb rows by their owner, tc[:, u] by frag(u)),
+# pmin over raw int32 for the tropical wire (exact because non-owners
+# ship INF).  Closure + combine run replicated, exactly like evalDG.  The
+# compiled programs are cached per (mesh, geometry, fpd, N) — fpd is the
+# only shape the placement adds; the assignment itself rides in as packed
+# argument data — so steady-state batches neither retrace nor recompile,
+# and survive in-place deltas (no fragment data is baked in).
 
 def _split_merged(merged, side: int, N: int):
     """Undo the payload concatenation: (d0, sb, direct, tc)."""
@@ -215,16 +220,50 @@ def _split_merged(merged, side: int, N: int):
             merged[side:side + N, side], merged[side + N:, :side])
 
 
+def _resolve_placement(fr: Fragmentation, mesh: Optional[Mesh],
+                       placement: Optional[Placement]):
+    """Normalize (mesh, placement) for the packed sharded engines.
+
+    Default placement is :meth:`Placement.balanced` over the mesh size (or
+    over ``min(devices, k)`` when no mesh is given); default mesh is the
+    first ``placement.d`` process devices.  Raises ValueError on any
+    mismatch — including the d > k case, which the sharded engines cannot
+    serve (a fragment is never split across devices)."""
+    if placement is None:
+        d = int(mesh.devices.size) if mesh is not None \
+            else min(len(jax.devices()), fr.k)
+        placement = Placement.balanced(fr, d)
+    if placement.k != fr.k:
+        raise ValueError(f"placement maps {placement.k} fragments but the "
+                         f"fragmentation has {fr.k}")
+    mesh = mesh or fragment_mesh(placement.d)
+    if mesh.devices.size != placement.d:
+        raise ValueError(f"mesh has {mesh.devices.size} devices but the "
+                         f"placement expects {placement.d}")
+    return mesh, placement
+
+
+def _pack_rows(arr: np.ndarray, perm: np.ndarray, pad) -> np.ndarray:
+    """Reorder a stacked [k, ...] per-fragment array into the device-major
+    [d*fpd, ...] packed layout; pad slots (perm == -1) are filled with the
+    array's inert value."""
+    out = np.full((len(perm),) + arr.shape[1:], pad, dtype=arr.dtype)
+    valid = perm >= 0
+    out[valid] = arr[perm[valid]]
+    return out
+
+
 @functools.lru_cache(maxsize=64)
-def _batch_reach_jitted(mesh: Mesh, nb: int, n_max: int, N: int):
+def _batch_reach_jitted(mesh: Mesh, nb: int, n_max: int, fpd: int, N: int):
     in_specs = tuple(P(FRAG_AXIS) for _ in range(8))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=P())
     def run(esrc, edst, src_local, tgt_local, s_slot, t_slot, srcidx, own):
-        d0, sb, direct, tc = _cache.local_stage_reach(
-            esrc[0], edst[0], src_local[0], s_slot[0], t_slot[0],
-            srcidx[0], own[0], tgt_local[0][:nb], n_max=n_max)
+        # each arg arrives [fpd, ...]: this device's owned fragments
+        d0, sb, direct, tc = _cache.local_stage_reach_packed(
+            esrc, edst, src_local, s_slot, t_slot,
+            srcidx, own, tgt_local[:, :nb], n_max=n_max)
         payload = jnp.concatenate([
             jnp.concatenate([d0, jnp.zeros((nb, 1), bool)], axis=1),
             jnp.concatenate([sb, direct[:, None]], axis=1),
@@ -241,15 +280,15 @@ def _batch_reach_jitted(mesh: Mesh, nb: int, n_max: int, N: int):
 
 
 @functools.lru_cache(maxsize=64)
-def _batch_dist_jitted(mesh: Mesh, nb: int, n_max: int, N: int):
+def _batch_dist_jitted(mesh: Mesh, nb: int, n_max: int, fpd: int, N: int):
     in_specs = tuple(P(FRAG_AXIS) for _ in range(8))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=P())
     def run(esrc, edst, src_local, tgt_local, s_slot, t_slot, srcidx, own):
-        w0, sb, direct, tc = _cache.local_stage_dist(
-            esrc[0], edst[0], src_local[0], s_slot[0], t_slot[0],
-            srcidx[0], own[0], tgt_local[0][:nb], n_max=n_max)
+        w0, sb, direct, tc = _cache.local_stage_dist_packed(
+            esrc, edst, src_local, s_slot, t_slot,
+            srcidx, own, tgt_local[:, :nb], n_max=n_max)
         inf_b = jnp.full((nb, 1), engine.INF, jnp.int32)
         inf_n = jnp.full((N, 1), engine.INF, jnp.int32)
         payload = jnp.concatenate([
@@ -272,7 +311,7 @@ def _batch_dist_jitted(mesh: Mesh, nb: int, n_max: int, N: int):
 
 @functools.lru_cache(maxsize=64)
 def _batch_rpq_jitted(mesh: Mesh, nb: int, n_max: int, B: int, Q: int,
-                      q_start: int, N: int):
+                      q_start: int, fpd: int, N: int):
     side = nb * Q
     in_specs = tuple(P(FRAG_AXIS) for _ in range(10)) + \
         tuple(P() for _ in range(5))
@@ -282,10 +321,10 @@ def _batch_rpq_jitted(mesh: Mesh, nb: int, n_max: int, B: int, Q: int,
     def run(esrc, edst, src_local, src_row, tgt_local, labels, gids,
             s_slot, t_slot, mine, q_labels, q_trans, s_gids, t_gids,
             local_b):
-        d0, sb, direct, tc = _cache.local_stage_rpq(
-            esrc[0], edst[0], src_local[0], src_row[0], tgt_local[0],
-            labels[0], gids[0], q_labels, q_trans, jnp.int32(q_start),
-            s_slot[0], t_slot[0], s_gids, t_gids, local_b, mine[0],
+        d0, sb, direct, tc = _cache.local_stage_rpq_packed(
+            esrc, edst, src_local, src_row, tgt_local,
+            labels, gids, q_labels, q_trans, jnp.int32(q_start),
+            s_slot, t_slot, s_gids, t_gids, local_b, mine,
             n_max=n_max, B=B)
         payload = jnp.concatenate([
             jnp.concatenate([d0, jnp.zeros((side, 1), bool)], axis=1),
@@ -318,59 +357,82 @@ def _srcidx_own(fr: Fragmentation):
     return srcidx, own
 
 
-def _device_inputs(fr: Fragmentation) -> dict:
+# inert pad values per fragment array: pad fragments must read as "no
+# edges, no sources, no ownership" so their local stages converge in zero
+# iterations and contribute only semiring zeros to the on-device merge
+def _array_pads(fr: Fragmentation) -> dict:
+    return dict(esrc=fr.n_max, edst=fr.n_max, src_local=fr.n_max,
+                src_row=fr.B, tgt_local=fr.n_max, labels=-9, gids=-1,
+                n_local=0)
+
+
+def _device_inputs(fr: Fragmentation, placement: Placement) -> dict:
     """Query-independent device uploads for the batched sharded engines —
-    the fragment arrays plus the boundary-ownership gathers — memoized on
-    ``fr.arrays_version`` so steady-state batches skip the host-to-device
-    copy of the edge lists entirely; any ``apply_delta``/``rebuild``
-    (which mutates the host arrays in place and bumps the version)
-    invalidates the memo."""
+    the fragment arrays plus the boundary-ownership gathers, packed into
+    the placement's device-major [d*fpd, ...] layout — memoized on
+    ``(fr.arrays_version, placement)`` so steady-state batches skip the
+    host-to-device copy of the edge lists entirely; any
+    ``apply_delta``/``rebuild`` (which mutates the host arrays in place
+    and bumps the version) invalidates the memo, as does switching
+    placements."""
     memo = fr.__dict__.get("_sharded_device_inputs")
-    if memo is not None and memo["version"] == fr.arrays_version:
+    if (memo is not None and memo["version"] == fr.arrays_version
+            and memo["placement"] == placement.cache_key()):
         return memo
+    perm = placement.perm()
+    pads = _array_pads(fr)
     srcidx, own = _srcidx_own(fr)
     mine = fr.boundary_owner()[None, :] == np.arange(fr.k)[:, None]
     mine[:, fr.nb_active:] = False     # spare slots are owned by nobody
     memo = dict(
-        version=fr.arrays_version,
-        arrs={key: jnp.asarray(v) for key, v in fr.arrays.items()},
-        srcidx=jnp.asarray(srcidx), own=jnp.asarray(own),
-        mine=jnp.asarray(mine), local_b=jnp.asarray(fr.boundary_local()))
+        version=fr.arrays_version, placement=placement.cache_key(),
+        perm=perm,
+        arrs={key: jnp.asarray(_pack_rows(v, perm, pads[key]))
+              for key, v in fr.arrays.items()},
+        srcidx=jnp.asarray(_pack_rows(srcidx, perm, fr.s_max - 1)),
+        own=jnp.asarray(_pack_rows(own, perm, False)),
+        mine=jnp.asarray(_pack_rows(mine, perm, False)),
+        local_b=jnp.asarray(fr.boundary_local()))
     fr.__dict__["_sharded_device_inputs"] = memo
     return memo
 
 
 def _batch_sharded_program(fr: Fragmentation, pairs: np.ndarray, kind: str,
                            qa: Optional[QueryAutomaton] = None,
-                           mesh: Optional[Mesh] = None):
+                           mesh: Optional[Mesh] = None,
+                           placement: Optional[Placement] = None):
     """(compiled-program, args) for one fused N-pair sharded batch of
     ``kind``.  All fragment data rides in as arguments, so one compiled
-    program per (mesh, geometry, batch-bucket) serves every batch and
-    stays valid across in-place graph deltas."""
-    mesh = mesh or fragment_mesh(fr.k)
-    assert mesh.devices.size == fr.k, "one device (shard) per fragment"
+    program per (mesh, geometry, fragments-per-device, batch-bucket)
+    serves every batch and stays valid across in-place graph deltas and
+    re-placements."""
+    mesh, placement = _resolve_placement(fr, mesh, placement)
     k, n_max, N = fr.k, fr.n_max, len(pairs)
     ss, tt = pairs[:, 0], pairs[:, 1]
-    # per-device query inputs: [k, N] local slots of s and t (n_max absent)
+    # per-fragment query inputs: [k, N] local slots of s and t (n_max
+    # absent), packed below into the device-major layout
     s_slots = np.full((k, N), n_max, dtype=np.int32)
     s_slots[fr.part[ss], np.arange(N)] = fr.owner_local[ss]
     t_slots = fr.slot_index()[tt, :].T.copy()              # [k, N]
-    dev = _device_inputs(fr)
+    dev = _device_inputs(fr, placement)
+    perm, fpd = dev["perm"], placement.fpd
+    s_slots = jnp.asarray(_pack_rows(s_slots, perm, n_max))
+    t_slots = jnp.asarray(_pack_rows(t_slots, perm, n_max))
     arrs = dev["arrs"]
     if kind == "rpq":
         run = _batch_rpq_jitted(mesh, fr.n_boundary, n_max, fr.B,
-                                qa.n_states, int(qa.start), N)
+                                qa.n_states, int(qa.start), fpd, N)
         args = (arrs["esrc"], arrs["edst"], arrs["src_local"],
                 arrs["src_row"], arrs["tgt_local"], arrs["labels"],
-                arrs["gids"], jnp.asarray(s_slots), jnp.asarray(t_slots),
+                arrs["gids"], s_slots, t_slots,
                 dev["mine"], jnp.asarray(qa.state_labels),
                 jnp.asarray(qa.trans), jnp.asarray(ss.astype(np.int32)),
                 jnp.asarray(tt.astype(np.int32)), dev["local_b"])
         return run, args
     jitted = {"reach": _batch_reach_jitted, "dist": _batch_dist_jitted}
-    run = jitted[kind](mesh, fr.n_boundary, n_max, N)
+    run = jitted[kind](mesh, fr.n_boundary, n_max, fpd, N)
     args = (arrs["esrc"], arrs["edst"], arrs["src_local"],
-            arrs["tgt_local"], jnp.asarray(s_slots), jnp.asarray(t_slots),
+            arrs["tgt_local"], s_slots, t_slots,
             dev["srcidx"], dev["own"])
     return run, args
 
@@ -380,51 +442,64 @@ def _as_batch_pairs(pairs) -> np.ndarray:
 
 
 def dis_reach_batch_sharded(fr: Fragmentation, pairs,
-                            mesh: Optional[Mesh] = None) -> np.ndarray:
+                            mesh: Optional[Mesh] = None,
+                            placement: Optional[Placement] = None,
+                            ) -> np.ndarray:
     """Answer N (s, t) pairs over the device mesh with a single collective.
 
-    Each device contributes, for its own fragment: its rows of the boundary
-    dependency matrix D0 (all-sources local fixpoint), the s-row of every
-    pair whose source it owns, and the t-column entries of every pair for
-    its own in-nodes.  All three ride ONE bitpacked psum (== OR: every bit
+    Each device contributes, for its owned fragments (one or several,
+    per ``placement``): their rows of the boundary dependency matrix D0
+    (all-sources local fixpoints), the s-row of every pair whose source
+    they own, and the t-column entries of their own in-nodes — OR-merged
+    on-device first, so the wire is identical to the one-fragment-per-
+    device layout.  All three ride ONE bitpacked psum (== OR: every bit
     is computed on exactly one device); the closure and the per-pair
     combine run replicated.
     """
     pairs = _as_batch_pairs(pairs)
     if len(pairs) == 0:
         return np.zeros(0, dtype=bool)
-    run, args = _batch_sharded_program(fr, pairs, "reach", mesh=mesh)
+    run, args = _batch_sharded_program(fr, pairs, "reach", mesh=mesh,
+                                       placement=placement)
     ans = np.array(run(*args))
     ans[pairs[:, 0] == pairs[:, 1]] = True
     return ans
 
 
 def dis_dist_batch_sharded(fr: Fragmentation, pairs,
-                           mesh: Optional[Mesh] = None) -> np.ndarray:
+                           mesh: Optional[Mesh] = None,
+                           placement: Optional[Placement] = None,
+                           ) -> np.ndarray:
     """Tropical twin of :func:`dis_reach_batch_sharded`: N shortest
     distances with ONE int32 pmin collective (W0 rows + per-pair tropical
-    s-rows and t-columns).  Returns [N] int64 with -1 for unreachable —
-    the same contract as the host ``cache.dis_dist_batch``."""
+    s-rows and t-columns; a device's owned fragments min-merge on-device
+    first).  Returns [N] int64 with -1 for unreachable — the same
+    contract as the host ``cache.dis_dist_batch``."""
     pairs = _as_batch_pairs(pairs)
     if len(pairs) == 0:
         return np.zeros(0, dtype=np.int64)
-    run, args = _batch_sharded_program(fr, pairs, "dist", mesh=mesh)
+    run, args = _batch_sharded_program(fr, pairs, "dist", mesh=mesh,
+                                       placement=placement)
     d = np.asarray(run(*args)).astype(np.int64)
     d[d >= int(engine.INF)] = -1
     return d
 
 
 def dis_rpq_batch_sharded(fr: Fragmentation, pairs, qa: QueryAutomaton,
-                          mesh: Optional[Mesh] = None) -> np.ndarray:
+                          mesh: Optional[Mesh] = None,
+                          placement: Optional[Placement] = None,
+                          ) -> np.ndarray:
     """Product-automaton twin of :func:`dis_reach_batch_sharded` for one
-    automaton: each device ships its product rvset rows plus N forward /
-    reverse product propagations' contributions in ONE bitpacked psum;
-    the (nb|Q|)^2 closure and combine run replicated.  Returns [N] bool
-    (s == t answered by nullability, like ``cache.dis_rpq_batch``)."""
+    automaton: each device ships its owned fragments' product rvset rows
+    plus N forward / reverse product propagations' contributions in ONE
+    bitpacked psum; the (nb|Q|)^2 closure and combine run replicated.
+    Returns [N] bool (s == t answered by nullability, like
+    ``cache.dis_rpq_batch``)."""
     pairs = _as_batch_pairs(pairs)
     if len(pairs) == 0:
         return np.zeros(0, dtype=bool)
-    run, args = _batch_sharded_program(fr, pairs, "rpq", qa=qa, mesh=mesh)
+    run, args = _batch_sharded_program(fr, pairs, "rpq", qa=qa, mesh=mesh,
+                                       placement=placement)
     ans = np.array(run(*args))
     ans[pairs[:, 0] == pairs[:, 1]] = bool(qa.nullable)
     return ans
@@ -432,12 +507,15 @@ def dis_rpq_batch_sharded(fr: Fragmentation, pairs, qa: QueryAutomaton,
 
 def lower_batch_hlo(fr: Fragmentation, pairs, kind: str,
                     qa: Optional[QueryAutomaton] = None,
-                    mesh: Optional[Mesh] = None) -> str:
+                    mesh: Optional[Mesh] = None,
+                    placement: Optional[Placement] = None) -> str:
     """Lowered HLO text of one fused sharded batch of ``kind`` — used by
     tests to assert the one-collective-per-group guarantee and the payload
-    dtype/shape structurally, for all three query classes."""
+    dtype/shape structurally, for all three query classes (including
+    packed d < k placements)."""
     pairs = _as_batch_pairs(pairs)
-    run, args = _batch_sharded_program(fr, pairs, kind, qa=qa, mesh=mesh)
+    run, args = _batch_sharded_program(fr, pairs, kind, qa=qa, mesh=mesh,
+                                       placement=placement)
     return run.lower(*args).as_text()
 
 
@@ -466,45 +544,67 @@ def _changed_row_inputs(fr: Fragmentation, row_ids: np.ndarray):
 
 
 @functools.lru_cache(maxsize=32)
-def _update_rows_jitted(mesh: Mesh, nb: int, n_max: int):
+def _update_rows_jitted(mesh: Mesh, nb: int, n_max: int, fpd: int):
     """Compiled-program cache for the sharded update: one entry per
-    (mesh, boundary, slot) geometry; jit then caches per changed-row
-    bucket shape, so steady-state deltas never retrace."""
+    (mesh, boundary, slot, fragments-per-device) geometry; jit then caches
+    per changed-row bucket shape, so steady-state deltas never retrace."""
     in_specs = tuple(P(FRAG_AXIS) for _ in range(6))
 
     @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
                        out_specs=(P(), P(FRAG_AXIS)))
     def run(esrc, edst, init, srcidx, own, tgt_local):
-        F = engine.resume_frontier_reach(esrc[0], edst[0], init[0],
-                                         n_max=n_max)      # [S, n+1]
-        tgt_mine = tgt_local[0][:nb]
-        rows = jnp.take(F, srcidx[0], axis=0)              # [r, n+1]
-        d0r = jnp.take(rows, tgt_mine, axis=1)             # [r, nb]
-        d0r = d0r & own[0][:, None]
+        # [fpd, ...] per device: resume every owned fragment's fixpoint
+        # (fragments untouched by the delta — including ones co-packed
+        # with a dirty neighbour — start at fixpoint and converge in one
+        # relaxation; inert pads converge in zero)
+        F = jax.vmap(functools.partial(
+            engine.resume_frontier_reach, n_max=n_max))(
+            esrc, edst, init)                              # [fpd, S, n+1]
+
+        def one(Ff, sidx, ownf, tloc):
+            rows = jnp.take(Ff, sidx, axis=0)              # [r, n+1]
+            return jnp.take(rows, tloc[:nb], axis=1) & ownf[:, None]
+
+        d0r = jnp.any(jax.vmap(one)(F, srcidx, own, tgt_local), axis=0)
         # the ONE update collective: changed rows only, bitpacked (pmax ==
         # OR: each row is owned by exactly one device, others ship zeros)
         merged = unpack_payload(jax.lax.pmax(pack_payload(d0r), FRAG_AXIS),
                                 nb)
-        return merged, F[None]
+        return merged, F
 
     return jax.jit(run)
 
 
 def _update_rows_program(fr: Fragmentation, warm_init: np.ndarray,
-                         row_ids: np.ndarray, mesh: Mesh):
-    assert mesh.devices.size == fr.k, "one device (shard) per fragment"
+                         row_ids: np.ndarray, mesh: Mesh,
+                         placement: Placement):
+    perm = placement.perm()
     srcidx, own = _changed_row_inputs(fr, row_ids)
-    arrs = (jnp.asarray(fr.arrays["esrc"]), jnp.asarray(fr.arrays["edst"]),
-            jnp.asarray(warm_init), jnp.asarray(srcidx), jnp.asarray(own),
-            jnp.asarray(fr.arrays["tgt_local"]))
-    return _update_rows_jitted(mesh, fr.n_boundary, fr.n_max), arrs
+    dev = _device_inputs(fr, placement)
+    arrs = (dev["arrs"]["esrc"], dev["arrs"]["edst"],
+            jnp.asarray(_pack_rows(np.asarray(warm_init), perm, False)),
+            jnp.asarray(_pack_rows(srcidx, perm, fr.s_max - 1)),
+            jnp.asarray(_pack_rows(own, perm, False)),
+            dev["arrs"]["tgt_local"])
+    return (_update_rows_jitted(mesh, fr.n_boundary, fr.n_max,
+                                placement.fpd), arrs)
+
+
+def _unpack_rows(packed: np.ndarray, perm: np.ndarray, k: int) -> np.ndarray:
+    """Invert :func:`_pack_rows`: device-major [d*fpd, ...] back to the
+    stacked per-fragment [k, ...] order (pad slots dropped)."""
+    valid = perm >= 0
+    out = np.zeros((k,) + packed.shape[1:], dtype=packed.dtype)
+    out[perm[valid]] = packed[valid]
+    return out
 
 
 def update_rows_sharded(fr: Fragmentation, warm_init: np.ndarray,
-                        row_ids: np.ndarray, mesh: Optional[Mesh] = None):
+                        row_ids: np.ndarray, mesh: Optional[Mesh] = None,
+                        placement: Optional[Placement] = None):
     """Recompute the changed D0 rows over the device mesh.
 
-    Every device resumes its own fragment's all-sources fixpoint from
+    Every device resumes its owned fragments' all-sources fixpoints from
     ``warm_init`` (clean fragments are already at fixpoint and converge in
     one relaxation), then contributes the rows of ``row_ids`` it owns.
     The ONE collective ships only the *changed* bitpacked rows —
@@ -512,30 +612,38 @@ def update_rows_sharded(fr: Fragmentation, warm_init: np.ndarray,
 
     Returns ``(rows, frontiers)``: the merged [r, nb] changed rows
     (replicated) and the per-fragment [k, S, n_max+1] frontiers (sharded
-    outputs, no extra communication).
+    outputs unpacked from the device-major layout, no extra
+    communication).
     """
-    mesh = mesh or fragment_mesh(fr.k)
-    run, arrs = _update_rows_program(fr, warm_init, row_ids, mesh)
-    return run(*arrs)
+    mesh, placement = _resolve_placement(fr, mesh, placement)
+    run, arrs = _update_rows_program(fr, warm_init, row_ids, mesh,
+                                     placement)
+    rows, fronts = run(*arrs)
+    fronts = _unpack_rows(np.asarray(fronts), placement.perm(), fr.k)
+    return rows, jnp.asarray(fronts)
 
 
 def lower_update_hlo(fr: Fragmentation, warm_init: np.ndarray,
                      row_ids: np.ndarray,
-                     mesh: Optional[Mesh] = None) -> str:
+                     mesh: Optional[Mesh] = None,
+                     placement: Optional[Placement] = None) -> str:
     """Lowered HLO of the sharded cache-update program — used by tests to
     assert the changed-rows-only payload structurally."""
-    mesh = mesh or fragment_mesh(fr.k)
-    run, arrs = _update_rows_program(fr, warm_init, row_ids, mesh)
+    mesh, placement = _resolve_placement(fr, mesh, placement)
+    run, arrs = _update_rows_program(fr, warm_init, row_ids, mesh,
+                                     placement)
     return run.lower(*arrs).as_text()
 
 
-def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None):
+def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None,
+                        placement: Optional[Placement] = None):
     """Sharded twin of :func:`repro.core.incremental.apply_delta` for
-    insert-only deltas against a reach cache: per-fragment frontier resume
-    runs on the fragment's own device and the update collective ships only
-    the changed bitpacked D0 rows; the rank-style closure update runs
-    replicated (exactly like evalDG).  Deletions, rebuilds, and tropical
-    caches fall back to the host path.
+    insert-only deltas against a reach cache: each fragment's frontier
+    resume runs on its owning device (dirty fragments co-packed with
+    clean ones only redo their own fixpoint) and the update collective
+    ships only the changed bitpacked D0 rows; the rank-style closure
+    update runs replicated (exactly like evalDG).  Deletions, rebuilds,
+    and tropical caches fall back to the host path.
     """
     from . import incremental
     from .cache import _boundary_rows, get_rvset_cache
@@ -560,7 +668,8 @@ def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None):
         return incremental.UpdateStats(mode="repair_sharded",
                                        **incremental._stats_base(report))
     padded = incremental.pad_row_ids(row_ids, cap=fr.n_boundary)
-    rows_new, fronts = update_rows_sharded(fr, warm, padded, mesh=mesh)
+    rows_new, fronts = update_rows_sharded(fr, warm, padded, mesh=mesh,
+                                           placement=placement)
     cache.bl_frontier = _boundary_rows(fr, fronts, False,
                                        lambda ref, v: ref.max(v))
     cache.closure = incremental._rank_update_bool(cache.closure, rows_new,

@@ -223,6 +223,12 @@ class Fragmentation:
         ``(side + 2N) * ceil((side+1)/32) * 32`` bits; the tropical wire
         ships raw int32 — ``(side + 2N) * (side + 1) * 32`` bits — never
         the ``B^2`` matrix per query.
+
+        Both formulas are placement-independent: when several fragments
+        share a device (k >> d, DESIGN.md Sec. 6) the owned rows are
+        merged on-device *before* the collective, so the wire is
+        bit-identical to the one-fragment-per-device layout and packing
+        adds zero traffic.
         """
         if kind not in ("reach", "dist", "bounded", "rpq"):
             raise ValueError(f"unknown query kind {kind!r}; expected one of "
@@ -520,6 +526,144 @@ def fragment_graph(g: Graph, part: np.ndarray, k: int,
                                            for i in range(k)], np.int64),
                          src_fill=np.array(in_counts[:k] or [0], np.int64),
                          stubs=stub_maps, reserve=reserve)
+
+
+# ---------------------------------------------------------------------------
+# fragment -> device placement (k >> d scale-out; DESIGN.md Sec. 6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Fragment-to-device assignment for the sharded backend.
+
+    The paper's model has one *site* per fragment; real meshes are smaller
+    than real fragmentations, so the shard_map engines pack several
+    fragments onto each device (``d <= k``).  Each device evaluates its
+    owned fragments' localEval stages independently (a vmap over the
+    owned-fragments axis), OR/min-merges their boundary rows locally, and
+    still ships exactly ONE collective per fused batch — the wire size is
+    unchanged, and the response-time bound becomes the largest *per-device*
+    workload ``max_d sum_{i on d} |F_i|`` instead of the largest fragment.
+
+    ``device_of[i]`` is the device owning fragment ``i``.  Devices hold at
+    most :attr:`fpd` fragments; short devices are padded with inert
+    fragments (pad-only edge lists, no owned boundary rows) whose
+    propagations converge in zero iterations.
+
+    Construct with :meth:`balanced` (greedy workload balancing — the
+    default the session picks) or :meth:`round_robin` (the baseline), or
+    pass an explicit ``device_of`` for a custom policy.  Instances are
+    frozen and hashable; :meth:`cache_key` keys compiled-program and
+    device-upload memos.
+    """
+
+    k: int                    # fragments
+    d: int                    # devices
+    device_of: tuple          # [k] owning device per fragment
+
+    def __post_init__(self):
+        object.__setattr__(self, "device_of",
+                           tuple(int(x) for x in self.device_of))
+        if self.d < 1:
+            raise ValueError(f"placement needs >= 1 device, got d={self.d}")
+        if self.d > self.k:
+            raise ValueError(
+                f"placement maps {self.k} fragments onto {self.d} devices: "
+                "d > k is invalid — shard_map packs whole fragments onto "
+                "devices and cannot split one fragment across several; "
+                "use a mesh with at most k devices")
+        if len(self.device_of) != self.k:
+            raise ValueError(f"device_of has {len(self.device_of)} entries "
+                             f"for {self.k} fragments")
+        bad = [x for x in self.device_of if not (0 <= x < self.d)]
+        if bad:
+            raise ValueError(f"device_of entries out of range [0, {self.d}): "
+                             f"{bad[:4]}")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def round_robin(cls, k: int, d: int) -> "Placement":
+        """Baseline policy: fragment ``i`` lives on device ``i % d``."""
+        return cls(k=k, d=d, device_of=tuple(i % d for i in range(k)))
+
+    @staticmethod
+    def fragment_weights(fr: Fragmentation) -> np.ndarray:
+        """Per-fragment workload estimate used by :meth:`balanced`.
+
+        The paper bounds response time by O(|F_i| * |V_f|) — each owned
+        in-node is one source of the all-sources fixpoint over the
+        fragment — so the weight is ``|F_i| * (1 + b_i)`` with ``b_i`` the
+        number of boundary rows fragment ``i`` owns (boundary size drives
+        both the fixpoint batch and the fragment's share of the wire)."""
+        b_owned = np.bincount(fr.part[fr.bnodes],
+                              minlength=fr.k).astype(np.int64)
+        return fr.frag_sizes.astype(np.int64) * (1 + b_owned)
+
+    @classmethod
+    def balanced(cls, fr: Fragmentation, d: int) -> "Placement":
+        """Greedy boundary-size balancing (LPT list scheduling).
+
+        Fragments are placed in decreasing :meth:`fragment_weights` order,
+        each onto the least-loaded device that still has a free slot
+        (devices are capped at ``ceil(k/d)`` fragments so the padded
+        owned-fragments axis — and with it compiled shapes and device
+        memory — never exceeds the round-robin layout's).  Guarantees the
+        standard list-scheduling bound
+        ``max_load <= total/d + max_weight`` and is deterministic."""
+        k = fr.k
+        if d > k:       # same validation as __post_init__, but earlier and
+            return cls(k=k, d=d, device_of=())   # with its clear message
+        w = cls.fragment_weights(fr)
+        cap = -(-k // d)                         # ceil(k/d)
+        loads = np.zeros(d, dtype=np.int64)
+        counts = np.zeros(d, dtype=np.int64)
+        device_of = np.zeros(k, dtype=np.int64)
+        for i in np.argsort(-w, kind="stable"):
+            free = counts < cap
+            cand = np.where(free, loads, np.iinfo(np.int64).max)
+            dev = int(np.argmin(cand))           # ties -> lowest device id
+            device_of[i] = dev
+            loads[dev] += w[i]
+            counts[dev] += 1
+        return cls(k=k, d=d, device_of=tuple(device_of))
+
+    # -- layout -------------------------------------------------------------
+
+    @property
+    def fpd(self) -> int:
+        """Owned-fragments axis length per device (max over devices)."""
+        return int(max(np.bincount(np.asarray(self.device_of, np.int64),
+                                   minlength=self.d).max(initial=0), 1))
+
+    def perm(self) -> np.ndarray:
+        """[d * fpd] int64 device-major packing order: entry ``dev*fpd + j``
+        is the fragment id in slot ``j`` of device ``dev``, or ``-1`` for
+        an inert pad slot.  This is the host-side permutation that packs
+        the stacked ``[k, ...]`` fragment arrays into the ``[d*fpd, ...]``
+        layout shard_map splits across the mesh."""
+        fpd = self.fpd
+        out = np.full(self.d * fpd, -1, dtype=np.int64)
+        fill = np.zeros(self.d, dtype=np.int64)
+        for i, dev in enumerate(self.device_of):
+            out[dev * fpd + fill[dev]] = i
+            fill[dev] += 1
+        return out
+
+    def loads(self, weights: np.ndarray) -> np.ndarray:
+        """[d] summed ``weights`` per device (``weights``: [k])."""
+        return np.bincount(np.asarray(self.device_of, np.int64),
+                           weights=np.asarray(weights, np.float64),
+                           minlength=self.d).astype(np.int64)
+
+    def max_load(self, fr: Fragmentation) -> int:
+        """Largest per-device workload — what the response-time bound
+        scales with once fragments are packed (DESIGN.md Sec. 6)."""
+        return int(self.loads(self.fragment_weights(fr)).max(initial=0))
+
+    def cache_key(self) -> tuple:
+        """Hashable identity for program-cache / upload-memo keys."""
+        return (self.k, self.d, self.device_of)
 
 
 def query_slots(fr: Fragmentation, s: int, t: int) -> Dict[str, np.ndarray]:

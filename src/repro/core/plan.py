@@ -48,7 +48,11 @@ def _check_endpoints(s, t):
 
 @dataclasses.dataclass(frozen=True)
 class Reach:
-    """q_r(s, t): is there any path from s to t?  (paper Fig. 3)"""
+    """q_r(s, t): is there any path from s to t?  (paper Fig. 3)
+
+    Run via ``session.run([Reach(s, t), ...])``; the result's ``answer``
+    is a bool.  Frozen and hashable so batches dedup with ``set()``.
+    """
 
     s: int
     t: int
@@ -64,7 +68,13 @@ class Reach:
 @dataclasses.dataclass(frozen=True)
 class Dist:
     """q_br(s, t, l) / dist(s, t): bounded reachability when ``bound`` is
-    given, exact shortest distance otherwise.  (paper Sec. 4)"""
+    given, exact shortest distance otherwise.  (paper Sec. 4)
+
+    With ``bound=l`` the result's ``answer`` is ``dist(s, t) <= l``; with
+    ``bound=None`` the result's ``distance`` is the exact hop count
+    (``-1`` if unreachable).  Both forms share one fused tropical
+    execution per batch group.
+    """
 
     s: int
     t: int
@@ -79,7 +89,12 @@ class Dist:
 class Rpq:
     """q_rr(s, t, R): regular path query — exactly one of ``regex`` (label
     names resolved against the session's graph) or ``automaton`` (a
-    prebuilt :class:`QueryAutomaton`) must be given.  (paper Sec. 5)"""
+    prebuilt :class:`QueryAutomaton`) must be given.  (paper Sec. 5)
+
+    The result's ``answer`` is True iff some s→t path spells a word the
+    automaton accepts.  Queries sharing an automaton (or an equal regex)
+    fuse into one product-graph execution per batch group.
+    """
 
     s: int
     t: int

@@ -4,8 +4,10 @@ query classes (DESIGN.md Sec. 5).
 ``repro.connect(fr)`` opens a session that owns the amortized caches
 (rvset / tropical / per-automaton product closures, physically attached to
 the Fragmentation so every view of it shares one copy), the backend choice
-(single-host ``vmap`` vs one-fragment-per-device ``shard_map``), snapshot
-version stamping, and delta application.  ``session.run([...])`` takes a
+(single-host ``vmap`` vs ``shard_map``, which packs the ``k`` fragments
+onto a mesh of ``d <= k`` devices per a
+:class:`~repro.core.fragments.Placement`), snapshot version stamping, and
+delta application.  ``session.run([...])`` takes a
 heterogeneous batch of :mod:`repro.core.plan` IR values, groups it by
 (kind, automaton) through the planner, and serves every group with ONE
 compiled batched execution — reach and dist through the PR-2 kernels, RPQs
@@ -29,7 +31,7 @@ from . import cache as _cache
 from . import engine, incremental
 from .automaton import QueryAutomaton, build_query_automaton
 from .engine import INF, QueryStats
-from .fragments import Fragmentation, GraphDelta, query_slots
+from .fragments import Fragmentation, GraphDelta, Placement, query_slots
 from .plan import (Dist, ExecutionGroup, Query, QueryPlan, QueryResult,
                    Reach, Rpq, plan_queries)
 
@@ -48,27 +50,43 @@ class SessionStats:
 
 
 def connect(fr: Fragmentation, backend: str = "auto",
-            cache: str = "amortized", mesh=None) -> "QuerySession":
-    """Open a :class:`QuerySession` over ``fr``.
+            cache: str = "amortized", mesh=None,
+            placement: Optional[Placement] = None) -> "QuerySession":
+    """Open a :class:`QuerySession` over ``fr`` — the front door of the
+    library (also exported as ``repro.connect``).
 
-    ``backend``: ``"vmap"`` runs every fragment's localEval as one SPMD
-    program on the host; ``"shard_map"`` places one fragment per device of
-    ``mesh`` (built lazily when omitted) and keeps the one-collective
-    guarantee per fused batch for all three query classes; ``"auto"``
-    picks shard_map iff enough devices exist for ``fr.k`` — judged against
-    ``mesh`` when one is passed.  ``cache``: ``"amortized"`` serves batches
-    from the rvset/product caches (built lazily, shared with every other
-    session on the same fragmentation); ``"none"`` evaluates each query
-    with the seed one-shot engine and never builds cache state.
+    ``backend``:
+
+    * ``"vmap"`` runs every fragment's localEval as one SPMD program on
+      the host device;
+    * ``"shard_map"`` distributes the fragments over the devices of
+      ``mesh`` (built lazily when omitted) according to ``placement``
+      and keeps the one-collective guarantee per fused batch for all
+      three query classes.  Meshes *smaller* than ``fr.k`` are valid —
+      each device packs several fragments (``k >> d`` scale-out); meshes
+      larger than ``fr.k`` are refused (a fragment is never split);
+    * ``"auto"`` picks shard_map whenever more than one device is
+      available and ``d <= fr.k`` (judged against ``mesh`` when one is
+      passed), and vmap otherwise.
+
+    ``placement`` maps fragment -> device (see
+    :class:`~repro.core.fragments.Placement`); when omitted the session
+    uses greedy workload balancing (``Placement.balanced``) over the mesh
+    size.  ``cache``: ``"amortized"`` serves batches from the
+    rvset/product caches (built lazily, shared with every other session
+    on the same fragmentation); ``"none"`` evaluates each query with the
+    seed one-shot engine and never builds cache state.
     """
-    return QuerySession(fr, backend=backend, cache=cache, mesh=mesh)
+    return QuerySession(fr, backend=backend, cache=cache, mesh=mesh,
+                        placement=placement)
 
 
 class QuerySession:
     """Unified query interface over one fragmentation (see :func:`connect`)."""
 
     def __init__(self, fr: Fragmentation, backend: str = "auto",
-                 cache: str = "amortized", mesh=None):
+                 cache: str = "amortized", mesh=None,
+                 placement: Optional[Placement] = None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{BACKENDS}")
@@ -78,26 +96,40 @@ class QuerySession:
         self.fr = fr
         self.cache_mode = cache
         self._mesh = mesh
-        # an explicit mesh overrides the process device count: auto must
-        # not pick shard_map against a mesh that doesn't fit fr.k (nor
-        # vmap despite a fitting one).  The sharded engine maps one
-        # fragment per mesh device, so an explicit mesh fits iff its size
-        # EQUALS fr.k; without one, a fitting mesh is built lazily from
-        # the first fr.k process devices.
-        if mesh is not None:
-            fits = mesh.devices.size == fr.k
-            have = f"a {mesh.devices.size}-device mesh"
+        if placement is not None and placement.k != fr.k:
+            raise ValueError(f"placement maps {placement.k} fragments but "
+                             f"the fragmentation has {fr.k}")
+        if placement is not None and mesh is not None \
+                and mesh.devices.size != placement.d:
+            raise ValueError(f"mesh has {mesh.devices.size} devices but "
+                             f"the placement expects {placement.d}")
+        # d: the device budget the sharded backend would run on.  An
+        # explicit placement or mesh pins it; otherwise every process
+        # device up to fr.k is used (fragments pack when devices < k).
+        # shard_map fits iff d <= fr.k — a fragment is never split across
+        # devices, so a mesh LARGER than fr.k is refused.
+        if placement is not None:
+            d = placement.d
+            have = f"a {d}-device placement"
+        elif mesh is not None:
+            d = int(mesh.devices.size)
+            have = f"a {d}-device mesh"
         else:
-            fits = len(jax.devices()) >= fr.k
+            d = min(len(jax.devices()), fr.k)
             have = f"{len(jax.devices())} devices"
+        fits = 1 <= d <= fr.k
         if backend == "auto":
-            backend = "shard_map" if fr.k > 1 and fits else "vmap"
+            backend = "shard_map" if fr.k > 1 and d > 1 and fits else "vmap"
         elif backend == "shard_map" and not fits:
             raise ValueError(
-                f"backend='shard_map' needs one device per fragment "
-                f"({fr.k} fragments), have {have}; use backend='auto' "
-                "to fall back to vmap")
+                f"backend='shard_map' packs fragments onto at most one "
+                f"device each ({fr.k} fragments), cannot use {have}; pass "
+                f"a mesh/placement with <= {fr.k} devices, or "
+                "backend='auto' to fall back to vmap")
         self.backend = backend
+        if backend == "shard_map" and placement is None:
+            placement = Placement.balanced(fr, d)
+        self.placement = placement
         self.stats = SessionStats()
         self.last_plan: Optional[QueryPlan] = None
         self._regex_cache: Dict[str, QueryAutomaton] = {}
@@ -135,7 +167,8 @@ class QuerySession:
         if self.backend == "shard_map" and self.fr.rvset_cache is not None:
             from . import distributed
             return distributed.apply_delta_sharded(self.fr, delta,
-                                                   mesh=self._mesh)
+                                                   mesh=self._mesh,
+                                                   placement=self.placement)
         return incremental.apply_delta(self.fr, delta)
 
     # -- query execution ---------------------------------------------------
@@ -210,23 +243,23 @@ class QuerySession:
             from . import distributed
         stats = self._group_stats(group)
         if group.kind == "reach":
-            ans = (distributed.dis_reach_batch_sharded(fr, pairs,
-                                                       mesh=self._mesh)
+            ans = (distributed.dis_reach_batch_sharded(
+                       fr, pairs, mesh=self._mesh, placement=self.placement)
                    if sharded else _cache.dis_reach_batch(fr, pairs))
             for i, q, a, st in zip(group.indices, group.queries, ans, stats):
                 results[i] = self._reach_result(q, a, st)
         elif group.kind == "dist":
             # exact distances once; each query's bound applies at answer
             # extraction (this is what lets bounded + exact queries fuse)
-            d = (distributed.dis_dist_batch_sharded(fr, pairs,
-                                                    mesh=self._mesh)
+            d = (distributed.dis_dist_batch_sharded(
+                     fr, pairs, mesh=self._mesh, placement=self.placement)
                  if sharded else _cache.dis_dist_batch(fr, pairs))
             for i, q, di, st in zip(group.indices, group.queries, d, stats):
                 results[i] = self._dist_result(q, int(di), st)
         else:                                   # rpq
-            ans = (distributed.dis_rpq_batch_sharded(fr, pairs,
-                                                     group.automaton,
-                                                     mesh=self._mesh)
+            ans = (distributed.dis_rpq_batch_sharded(
+                       fr, pairs, group.automaton, mesh=self._mesh,
+                       placement=self.placement)
                    if sharded else _cache.dis_rpq_batch(fr, pairs,
                                                         group.automaton))
             for i, q, a, st in zip(group.indices, group.queries, ans, stats):

@@ -111,8 +111,15 @@ def test_session_shard_map_compat_single_device():
 def test_session_auto_backend_single_device_is_vmap():
     g, fr = _case(12, 30, 3, 0)
     assert repro.connect(fr).backend == "vmap"
-    with pytest.raises(ValueError, match="shard_map"):
-        repro.connect(fr, backend="shard_map")      # 3 fragments, 1 device
+    # 3 fragments, 1 device: since the k >> d packing layer, explicit
+    # shard_map is valid (all fragments packed onto the one device) and
+    # must agree with vmap.
+    sess = repro.connect(fr, backend="shard_map")
+    assert sess.backend == "shard_map" and sess.placement.d == 1
+    queries = [Reach(0, 5), Dist(1, 7), Reach(4, 4)]
+    got = [r.answer for r in sess.run(queries)]
+    want = [r.answer for r in repro.connect(fr, backend="vmap").run(queries)]
+    assert got == want
     with pytest.raises(ValueError, match="backend"):
         repro.connect(fr, backend="nope")
     with pytest.raises(ValueError, match="cache"):
@@ -267,16 +274,20 @@ def test_sharded_device_inputs_memoized_until_delta():
     gathers) are built once per fragmentation state: repeat batches reuse
     the memo, and an apply_delta (which mutates the host arrays in place)
     invalidates it via arrays_version."""
-    from repro.core import distributed
+    from repro.core import Placement, distributed
     g, fr = _case(16, 40, 2, 3)
-    m1 = distributed._device_inputs(fr)
-    assert distributed._device_inputs(fr) is m1       # steady state: reused
+    pl = Placement.round_robin(fr.k, fr.k)
+    m1 = distributed._device_inputs(fr, pl)
+    assert distributed._device_inputs(fr, pl) is m1   # steady state: reused
+    # a different placement misses the (version, placement) memo key
+    other = Placement.balanced(fr, 1)
+    assert distributed._device_inputs(fr, other) is not m1
     v0 = fr.arrays_version
     fr.apply_delta(GraphDelta.insert([(0, 1)]))
     assert fr.arrays_version == v0 + 1
-    m2 = distributed._device_inputs(fr)
+    m2 = distributed._device_inputs(fr, pl)
     assert m2 is not m1 and m2["version"] == fr.arrays_version
-    assert distributed._device_inputs(fr) is m2
+    assert distributed._device_inputs(fr, pl) is m2
 
 
 def test_server_submit_validates_kind_and_args():
@@ -400,15 +411,21 @@ for grp in sess.last_plan.groups:
     bits_ok &= sum(res[i].stats.collective_rounds for i in grp.indices) == 1
 
 # backend='auto' judges shard_map-vs-vmap against an explicit mesh, not
-# the process device count (8 devices here, mesh of 2): shard_map needs
-# the mesh to fit fr.k exactly (one device per fragment), so both a
-# too-small and a too-big mesh must fall back / refuse instead of
+# the process device count (8 devices here, mesh of 2): with the k >> d
+# packing layer a 2-device mesh HOLDS 4 fragments (2 per device), so auto
+# picks shard_map; a mesh larger than fr.k still cannot work (a fragment
+# is never split across devices) and must fall back / refuse instead of
 # crashing inside the engine
 mesh2 = fragment_mesh(2)
 mesh4 = fragment_mesh(4)
 fr4 = fragment_graph(g, random_partition(g, 4, 0), 4)
 fr2 = fragment_graph(g, random_partition(g, 2, 0), 2)
-auto_small_mesh = repro.connect(fr4, mesh=mesh2).backend     # must be vmap
+small = repro.connect(fr4, mesh=mesh2)        # 4 frags packed on 2 devices
+auto_small_mesh = small.backend                     # must be shard_map now
+small_res = small.run([Reach(0, 5), Dist(1, 7)])
+small_ok = (small_res[0].answer == oracle_reach(g, 0, 5)
+            and small_res[1].distance == oracle_dist(g, 1, 7)
+            and small.placement.d == 2 and small.placement.fpd == 2)
 auto_big_mesh = repro.connect(fr2, mesh=mesh4).backend       # must be vmap
 auto_fit_mesh = repro.connect(fr2, mesh=mesh2).backend  # must be shard_map
 try:
@@ -459,6 +476,7 @@ print(json.dumps({"backend": sess.backend, "ok": got == want,
                   "groups": sess.last_plan.n_groups,
                   "executions": sess.stats.executions,
                   "auto_small_mesh": auto_small_mesh,
+                  "small_ok": bool(small_ok),
                   "auto_big_mesh": auto_big_mesh,
                   "auto_fit_mesh": auto_fit_mesh,
                   "big_mesh_raises": bool(big_mesh_raises),
@@ -499,12 +517,13 @@ def test_shard_map_group_traffic_sums_to_one_collective(shard_map_report):
 
 def test_auto_backend_respects_explicit_mesh(shard_map_report):
     """backend='auto' with an explicit mesh decides from the mesh's device
-    count: a 2-device mesh must refuse shard_map for 4 fragments (even with
-    8 process devices) and pick it for 2; a mesh larger than fr.k must fall
-    back to vmap (auto) or raise up front (explicit) instead of crashing
-    inside the sharded engine."""
+    count: a 2-device mesh holds 4 fragments (2 packed per device) so auto
+    picks shard_map and answers match the oracle; a mesh larger than fr.k
+    must fall back to vmap (auto) or raise up front (explicit) instead of
+    crashing inside the sharded engine."""
     rep = shard_map_report
-    assert rep["auto_small_mesh"] == "vmap", rep
+    assert rep["auto_small_mesh"] == "shard_map", rep
+    assert rep["small_ok"], rep
     assert rep["auto_big_mesh"] == "vmap", rep
     assert rep["auto_fit_mesh"] == "shard_map", rep
     assert rep["big_mesh_raises"], rep
