@@ -29,7 +29,12 @@ shipping in an artifact:
   on 8 devices) in both runs must report ``answers_match`` and
   ``payload_bits_ok`` — packing must change neither answers nor the wire
   — and the fast run's densest-packing per-query cost must not exceed 3x
-  the committed value.
+  the committed value;
+* chaos serving (``BENCH_pr7``): both runs must report ``answers_ok``
+  (every answered result exact against the delta-replay oracle) and a
+  request ``success_rate`` >= 0.99 under the seeded 1% fault schedule,
+  and the fast run's steady-state p95 per-query latency must not exceed
+  3x the committed value.
 
 Exits non-zero with a FAIL line per violated bound.
 """
@@ -46,6 +51,8 @@ MIXED_REGRESSION_FACTOR = 2.0
 MIN_FUSED_SPEEDUP_FULL = 3.0
 MIN_FUSED_SPEEDUP_FAST = 1.3
 SHARDED_REGRESSION_FACTOR = 3.0
+MIN_CHAOS_SUCCESS_RATE = 0.99
+CHAOS_P95_REGRESSION_FACTOR = 3.0
 
 
 def _load(path: str) -> dict:
@@ -165,6 +172,29 @@ def main(argv=None) -> int:
         f"fast {dense_fast['per_query_us']:.1f}us vs committed "
         f"{dense_base['per_query_us']:.1f}us "
         f"(limit {SHARDED_REGRESSION_FACTOR}x)",
+    )
+
+    base7 = _load(f"{root}/BENCH_pr7.json")
+    fast7 = _load(f"{root}/BENCH_pr7.fast.json")
+    for tag, rep in (("committed", base7), ("fast", fast7)):
+        check(
+            f"chaos answers_ok ({tag})",
+            rep["answers_ok"],
+            "answered results exact against the delta-replay oracle",
+        )
+        rate = rep["success_rate"]
+        check(
+            f"chaos success_rate ({tag})",
+            rate >= MIN_CHAOS_SUCCESS_RATE,
+            f"{rate:.3f} (floor {MIN_CHAOS_SUCCESS_RATE})",
+        )
+    p95_base = base7["p95_per_query_us"]
+    p95_fast = fast7["p95_per_query_us"]
+    check(
+        "chaos p95_per_query_us",
+        p95_fast <= CHAOS_P95_REGRESSION_FACTOR * p95_base,
+        f"fast {p95_fast:.1f}us vs committed {p95_base:.1f}us "
+        f"(limit {CHAOS_P95_REGRESSION_FACTOR}x)",
     )
 
     if failures:

@@ -158,10 +158,30 @@ def main() -> None:
                        "fast_mode": fast, **res}, f, indent=2)
         print(f"# wrote {out}")
 
+    def chaos_bench():
+        res = pe.exp_chaos(n=int(160 * scale) + 8, m=int(480 * scale) + 8,
+                           rounds=6 if fast else 12,
+                           per_round=9 if fast else 15)
+        print("chaos/p95_per_query,"
+              f"{res['p95_per_query_us']:.1f},"
+              f"p50={res['p50_per_query_us']:.1f};"
+              f"success_rate={res['success_rate']:.3f};"
+              f"answers_ok={res['answers_ok']};"
+              f"retries={res['retries']};"
+              f"rollbacks={res['rollbacks']};"
+              f"degraded_groups={res['degraded_groups']}")
+        out = "BENCH_pr7" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "chaos_serving",
+                       "fast_mode": fast, **res}, f, indent=2)
+        print(f"# wrote {out}")
+
     section("# ISSUE-5: sharded one-collective batches, all query kinds",
             sharded_mixed)
     section("# ISSUE-6: k >> d scale-out, fragments packed per device",
             scaleout)
+    section("# ISSUE-7: fault-tolerant serving under a seeded 1% fault "
+            "schedule", chaos_bench)
 
     if failures:
         print(f"# FAILED sections ({len(failures)}): {failures}",

@@ -22,6 +22,10 @@ group, and keeps everything valid under graph deltas
 from .core.fragments import Placement
 from .core.plan import Dist, Query, QueryResult, Reach, Rpq
 from .core.session import QuerySession, connect
+from .errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
+                     InjectedFault, QueryTooExpensive, ServingError)
 
 __all__ = ["connect", "QuerySession", "QueryResult",
-           "Reach", "Dist", "Rpq", "Query", "Placement"]
+           "Reach", "Dist", "Rpq", "Query", "Placement",
+           "ServingError", "QueryTooExpensive", "DeadlineExceeded",
+           "DeadLetterError", "DeltaApplyFailed", "InjectedFault"]

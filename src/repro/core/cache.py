@@ -79,11 +79,34 @@ class RvsetCache:
     def refresh_device_arrays(self) -> None:
         """Re-upload the (host-mutated) fragment arrays after a delta; the
         cached rpq closures are dropped (they bake in the old arrays) and
-        rebuild lazily on the next regular query."""
-        self.arrays = {k: jnp.asarray(v) for k, v in self.fr.arrays.items()}
+        rebuild lazily on the next regular query.
+
+        ``jnp.array`` (copy=True), NOT ``jnp.asarray``: on CPU the latter
+        may zero-copy alias the host buffer, and these host arrays are
+        mutated in place by ``Fragmentation.apply_delta`` — an aliased
+        device array would see mid-update state and survive a rollback."""
+        self.arrays = {k: jnp.array(v) for k, v in self.fr.arrays.items()}
         self.part_b = self.fr.boundary_owner()
         self.rpq_closures.clear()
         self.version += 1
+
+    # -- rollback snapshots (failed-delta recovery; DESIGN.md Sec. 7) ------
+
+    _SNAP_FIELDS = ("arrays", "bl_frontier", "closure", "part_b", "bl_dist",
+                    "dist_closure", "rpq_closures", "version", "repair_debt")
+
+    def snapshot(self) -> dict:
+        """Shallow state capture for rollback: repairs rebind immutable
+        jax arrays (functional ``.at[].set``), so references suffice —
+        except ``rpq_closures``, which repairs clear *in place*."""
+        snap = {name: getattr(self, name) for name in self._SNAP_FIELDS}
+        snap["rpq_closures"] = dict(self.rpq_closures)
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        for name in self._SNAP_FIELDS:
+            setattr(self, name, snap[name])
+        self.rpq_closures = dict(snap["rpq_closures"])
 
 
 def _boundary_rows(fr: Fragmentation, frontiers, fill, combine):
@@ -104,7 +127,8 @@ def prepare_rvset_cache(fr: Fragmentation, with_dist: bool = False,
     """Build (or extend) the amortized cache and attach it to ``fr``."""
     cache = fr.rvset_cache
     if cache is None:
-        arrs = {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+        # jnp.array (copy=True), not asarray: see refresh_device_arrays.
+        arrs = {k: jnp.array(v) for k, v in fr.arrays.items()}
         front = jax.vmap(functools.partial(
             engine.local_frontier_reach, n_max=fr.n_max))(
             arrs["esrc"], arrs["edst"], arrs["src_local"])   # [k, S, n+1]

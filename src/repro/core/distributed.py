@@ -400,13 +400,16 @@ def _device_inputs(fr: Fragmentation, placement: Placement) -> dict:
 def _batch_sharded_program(fr: Fragmentation, pairs: np.ndarray, kind: str,
                            qa: Optional[QueryAutomaton] = None,
                            mesh: Optional[Mesh] = None,
-                           placement: Optional[Placement] = None):
+                           placement: Optional[Placement] = None,
+                           chaos=None):
     """(compiled-program, args) for one fused N-pair sharded batch of
     ``kind``.  All fragment data rides in as arguments, so one compiled
     program per (mesh, geometry, fragments-per-device, batch-bucket)
     serves every batch and stays valid across in-place graph deltas and
     re-placements."""
     mesh, placement = _resolve_placement(fr, mesh, placement)
+    if chaos is not None:
+        chaos.maybe_fail("upload")     # guards the _device_inputs transfer
     k, n_max, N = fr.k, fr.n_max, len(pairs)
     ss, tt = pairs[:, 0], pairs[:, 1]
     # per-fragment query inputs: [k, N] local slots of s and t (n_max
@@ -444,7 +447,7 @@ def _as_batch_pairs(pairs) -> np.ndarray:
 def dis_reach_batch_sharded(fr: Fragmentation, pairs,
                             mesh: Optional[Mesh] = None,
                             placement: Optional[Placement] = None,
-                            ) -> np.ndarray:
+                            chaos=None) -> np.ndarray:
     """Answer N (s, t) pairs over the device mesh with a single collective.
 
     Each device contributes, for its owned fragments (one or several,
@@ -460,7 +463,9 @@ def dis_reach_batch_sharded(fr: Fragmentation, pairs,
     if len(pairs) == 0:
         return np.zeros(0, dtype=bool)
     run, args = _batch_sharded_program(fr, pairs, "reach", mesh=mesh,
-                                       placement=placement)
+                                       placement=placement, chaos=chaos)
+    if chaos is not None:
+        chaos.maybe_fail("engine.shard_map", pairs=pairs)
     ans = np.array(run(*args))
     ans[pairs[:, 0] == pairs[:, 1]] = True
     return ans
@@ -469,7 +474,7 @@ def dis_reach_batch_sharded(fr: Fragmentation, pairs,
 def dis_dist_batch_sharded(fr: Fragmentation, pairs,
                            mesh: Optional[Mesh] = None,
                            placement: Optional[Placement] = None,
-                           ) -> np.ndarray:
+                           chaos=None) -> np.ndarray:
     """Tropical twin of :func:`dis_reach_batch_sharded`: N shortest
     distances with ONE int32 pmin collective (W0 rows + per-pair tropical
     s-rows and t-columns; a device's owned fragments min-merge on-device
@@ -479,7 +484,9 @@ def dis_dist_batch_sharded(fr: Fragmentation, pairs,
     if len(pairs) == 0:
         return np.zeros(0, dtype=np.int64)
     run, args = _batch_sharded_program(fr, pairs, "dist", mesh=mesh,
-                                       placement=placement)
+                                       placement=placement, chaos=chaos)
+    if chaos is not None:
+        chaos.maybe_fail("engine.shard_map", pairs=pairs)
     d = np.asarray(run(*args)).astype(np.int64)
     d[d >= int(engine.INF)] = -1
     return d
@@ -488,7 +495,7 @@ def dis_dist_batch_sharded(fr: Fragmentation, pairs,
 def dis_rpq_batch_sharded(fr: Fragmentation, pairs, qa: QueryAutomaton,
                           mesh: Optional[Mesh] = None,
                           placement: Optional[Placement] = None,
-                          ) -> np.ndarray:
+                          chaos=None) -> np.ndarray:
     """Product-automaton twin of :func:`dis_reach_batch_sharded` for one
     automaton: each device ships its owned fragments' product rvset rows
     plus N forward / reverse product propagations' contributions in ONE
@@ -499,7 +506,9 @@ def dis_rpq_batch_sharded(fr: Fragmentation, pairs, qa: QueryAutomaton,
     if len(pairs) == 0:
         return np.zeros(0, dtype=bool)
     run, args = _batch_sharded_program(fr, pairs, "rpq", qa=qa, mesh=mesh,
-                                       placement=placement)
+                                       placement=placement, chaos=chaos)
+    if chaos is not None:
+        chaos.maybe_fail("engine.shard_map", pairs=pairs)
     ans = np.array(run(*args))
     ans[pairs[:, 0] == pairs[:, 1]] = bool(qa.nullable)
     return ans
@@ -636,7 +645,7 @@ def lower_update_hlo(fr: Fragmentation, warm_init: np.ndarray,
 
 
 def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None,
-                        placement: Optional[Placement] = None):
+                        placement: Optional[Placement] = None, chaos=None):
     """Sharded twin of :func:`repro.core.incremental.apply_delta` for
     insert-only deltas against a reach cache: each fragment's frontier
     resume runs on its owning device (dirty fragments co-packed with
@@ -644,16 +653,21 @@ def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None,
     ships only the changed bitpacked D0 rows; the rank-style closure
     update runs replicated (exactly like evalDG).  Deletions, rebuilds,
     and tropical caches fall back to the host path.
+
+    Like the host path, the ``delta.repair`` chaos site fires *after* the
+    host arrays mutate — rollback is the caller's job.
     """
     from . import incremental
     from .cache import _boundary_rows, get_rvset_cache
 
     cache = get_rvset_cache(fr)
     if (delta.is_empty() or delta.n_del or cache.bl_dist is not None):
-        return incremental.apply_delta(fr, delta)
+        return incremental.apply_delta(fr, delta, chaos=chaos)
     warm = np.zeros((fr.k, fr.s_max, fr.n_max + 1), dtype=bool)
     bl_host = np.asarray(cache.bl_frontier)
     report = fr.apply_delta(delta)
+    if chaos is not None:
+        chaos.maybe_fail("delta.repair")
     if report.rebuilt:
         return incremental.rebuild_cache(fr, cache.version, report,
                                          with_dist=False,

@@ -248,6 +248,46 @@ class Fragmentation:
     def largest_fragment(self) -> int:
         return int(self.frag_sizes.max())
 
+    # -- rollback snapshots (failed-delta recovery; DESIGN.md Sec. 7) ------
+
+    def snapshot(self) -> dict:
+        """Capture every piece of host state a delta (apply + cache
+        repair) can touch, so a failed update can roll back to a
+        consistent pre-delta point.  Arrays that :meth:`apply_delta`
+        mutates *in place* are copied; fields that are only ever rebound
+        wholesale (``g``, ``bnodes``, the whole-object rebinds of
+        ``_rebuild_in_place``) are captured by reference.  The attached
+        rvset cache is snapshotted too (its repairs rebind immutable jax
+        arrays, so its snapshot is shallow)."""
+        snap = {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+        snap["arrays"] = {k: v.copy() for k, v in self.arrays.items()}
+        snap["b_index"] = self.b_index.copy()
+        snap["frag_sizes"] = self.frag_sizes.copy()
+        for name in ("n_edges", "src_fill", "_slot_of"):
+            v = getattr(self, name)
+            if v is not None:
+                snap[name] = v.copy()
+        if self.stubs is not None:
+            snap["stubs"] = [dict(s) for s in self.stubs]
+        snap["_cache_state"] = (None if self.rvset_cache is None
+                                else self.rvset_cache.snapshot())
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Roll back to a :meth:`snapshot`: ``arrays_version`` and the
+        attached cache's ``version`` return to their pre-delta values and
+        all host arrays to their pre-delta contents.  The memoized sharded
+        device uploads are dropped — the version counter can be re-bumped
+        to the same value after a rollback, so a stale memo must never
+        survive one."""
+        cache_state = snap["_cache_state"]
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, snap[f.name])
+        if self.rvset_cache is not None and cache_state is not None:
+            self.rvset_cache.restore(cache_state)
+        self.__dict__.pop("_sharded_device_inputs", None)
+
     # -- dynamic updates (DESIGN.md Sec. 3.5) ------------------------------
 
     def apply_delta(self, delta: GraphDelta) -> DeltaReport:

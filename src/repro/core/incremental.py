@@ -90,18 +90,26 @@ def rebuild_cache(fr: Fragmentation, old_version: int, report,
 
 
 def apply_delta(fr: Fragmentation, delta: GraphDelta,
-                use_pallas="auto") -> UpdateStats:
+                use_pallas="auto", chaos=None) -> UpdateStats:
     """Apply ``delta`` to ``fr`` and incrementally repair its rvset cache.
 
     The attached cache (if any) answers identically to one rebuilt from
     scratch afterwards — pinned property-style by tests/test_incremental.py.
     An empty delta is a strict no-op (cached arrays keep their identity).
+
+    ``chaos`` (a :class:`repro.serve.faults.FaultInjector`) is consulted at
+    the ``delta.repair`` site *after* the host arrays have mutated, so an
+    injected failure leaves the fragmentation genuinely mid-update — the
+    caller (``QuerySession.apply``) is responsible for rolling back via
+    :meth:`Fragmentation.snapshot` / ``restore``.
     """
     if delta.is_empty():
         return UpdateStats(mode="noop")
     cache = fr.rvset_cache
     with_dist = cache is not None and cache.bl_dist is not None
     report = fr.apply_delta(delta)
+    if chaos is not None:
+        chaos.maybe_fail("delta.repair")
     base = _stats_base(report)
     if cache is None:
         return UpdateStats(mode="structural", **base)

@@ -139,6 +139,10 @@ class QueryResult:
     dependency_matrix: Optional[np.ndarray] = None
     # version of the rvset cache consulted (None: uncached execution)
     cache_version: Optional[int] = None
+    # True when the sharded engine failed for this query's group and the
+    # answer was served by the vmap fallback instead (still exact; see
+    # DESIGN.md Sec. 7)
+    degraded: bool = False
 
 
 # ---------------------------------------------------------------------------

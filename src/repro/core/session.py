@@ -29,6 +29,7 @@ import numpy as np
 
 from . import cache as _cache
 from . import engine, incremental
+from ..errors import DeltaApplyFailed
 from .automaton import QueryAutomaton, build_query_automaton
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, GraphDelta, Placement, query_slots
@@ -47,11 +48,15 @@ class SessionStats:
     batches: int = 0         # run() calls
     executions: int = 0      # compiled-program invocations issued
     updates: int = 0         # deltas applied
+    # robustness accounting (DESIGN.md Sec. 7)
+    degraded_groups: int = 0  # sharded groups served by the vmap fallback
+    rollbacks: int = 0        # failed deltas rolled back to their snapshot
 
 
 def connect(fr: Fragmentation, backend: str = "auto",
             cache: str = "amortized", mesh=None,
-            placement: Optional[Placement] = None) -> "QuerySession":
+            placement: Optional[Placement] = None,
+            chaos=None) -> "QuerySession":
     """Open a :class:`QuerySession` over ``fr`` — the front door of the
     library (also exported as ``repro.connect``).
 
@@ -76,9 +81,14 @@ def connect(fr: Fragmentation, backend: str = "auto",
     rvset/product caches (built lazily, shared with every other session
     on the same fragmentation); ``"none"`` evaluates each query with the
     seed one-shot engine and never builds cache state.
+
+    ``chaos``: an optional :class:`repro.serve.faults.FaultInjector`
+    consulted at every engine / upload / delta-repair site — the handle
+    tests and benchmarks use to exercise the failure paths of
+    DESIGN.md Sec. 7.  ``None`` (the default) adds zero overhead.
     """
     return QuerySession(fr, backend=backend, cache=cache, mesh=mesh,
-                        placement=placement)
+                        placement=placement, chaos=chaos)
 
 
 class QuerySession:
@@ -86,7 +96,7 @@ class QuerySession:
 
     def __init__(self, fr: Fragmentation, backend: str = "auto",
                  cache: str = "amortized", mesh=None,
-                 placement: Optional[Placement] = None):
+                 placement: Optional[Placement] = None, chaos=None):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of "
                              f"{BACKENDS}")
@@ -130,6 +140,7 @@ class QuerySession:
         if backend == "shard_map" and placement is None:
             placement = Placement.balanced(fr, d)
         self.placement = placement
+        self.chaos = chaos
         self.stats = SessionStats()
         self.last_plan: Optional[QueryPlan] = None
         self._regex_cache: Dict[str, QueryAutomaton] = {}
@@ -162,14 +173,28 @@ class QuerySession:
         The host cache is repaired even though sharded *answers* recompute
         on-device: it stays the ``cache_version`` snapshot source and is
         shared with vmap sessions/shims on this fragmentation, which would
-        otherwise read stale state (DESIGN.md Sec. 5, known trade-off)."""
+        otherwise read stale state (DESIGN.md Sec. 5, known trade-off).
+
+        A delta that fails mid-apply (bad input, engine failure, injected
+        chaos) is **rolled back**: the fragmentation and its caches return
+        to the pre-delta snapshot (``arrays_version`` / ``cache_version``
+        unchanged, subsequent queries answer against the pre-delta graph)
+        and a typed :class:`~repro.errors.DeltaApplyFailed` wrapping the
+        cause is raised (DESIGN.md Sec. 7)."""
         self.stats.updates += 1
-        if self.backend == "shard_map" and self.fr.rvset_cache is not None:
-            from . import distributed
-            return distributed.apply_delta_sharded(self.fr, delta,
-                                                   mesh=self._mesh,
-                                                   placement=self.placement)
-        return incremental.apply_delta(self.fr, delta)
+        snap = self.fr.snapshot()
+        try:
+            if (self.backend == "shard_map"
+                    and self.fr.rvset_cache is not None):
+                from . import distributed
+                return distributed.apply_delta_sharded(
+                    self.fr, delta, mesh=self._mesh,
+                    placement=self.placement, chaos=self.chaos)
+            return incremental.apply_delta(self.fr, delta, chaos=self.chaos)
+        except Exception as exc:
+            self.fr.restore(snap)
+            self.stats.rollbacks += 1
+            raise DeltaApplyFailed(exc) from exc
 
     # -- query execution ---------------------------------------------------
 
@@ -236,35 +261,62 @@ class QuerySession:
         shard_map backend every kind routes through its one-collective
         sharded batch engine, so the paper's guarantees survive fusion for
         all three query classes (DESIGN.md Sec. 3.3)."""
-        fr = self.fr
         pairs = group.pairs()
-        sharded = self.backend == "shard_map"
-        if sharded:
-            from . import distributed
         stats = self._group_stats(group)
+        ans, degraded = self._execute_group(group.kind, pairs,
+                                            group.automaton)
         if group.kind == "reach":
-            ans = (distributed.dis_reach_batch_sharded(
-                       fr, pairs, mesh=self._mesh, placement=self.placement)
-                   if sharded else _cache.dis_reach_batch(fr, pairs))
             for i, q, a, st in zip(group.indices, group.queries, ans, stats):
                 results[i] = self._reach_result(q, a, st)
         elif group.kind == "dist":
             # exact distances once; each query's bound applies at answer
             # extraction (this is what lets bounded + exact queries fuse)
-            d = (distributed.dis_dist_batch_sharded(
-                     fr, pairs, mesh=self._mesh, placement=self.placement)
-                 if sharded else _cache.dis_dist_batch(fr, pairs))
-            for i, q, di, st in zip(group.indices, group.queries, d, stats):
+            for i, q, di, st in zip(group.indices, group.queries, ans, stats):
                 results[i] = self._dist_result(q, int(di), st)
         else:                                   # rpq
-            ans = (distributed.dis_rpq_batch_sharded(
-                       fr, pairs, group.automaton, mesh=self._mesh,
-                       placement=self.placement)
-                   if sharded else _cache.dis_rpq_batch(fr, pairs,
-                                                        group.automaton))
             for i, q, a, st in zip(group.indices, group.queries, ans, stats):
                 results[i] = self._rpq_result(q, group.automaton, a, st)
+        if degraded:
+            for i in group.indices:
+                results[i].degraded = True
         self.stats.executions += 1
+
+    def _execute_group(self, kind: str, pairs, qa):
+        """One batched engine execution; returns ``(answers, degraded)``.
+
+        On the shard_map backend an engine/upload failure **degrades**
+        instead of failing the group: the same batch re-runs on the host
+        vmap path, which answers from the host rvset cache — kept repaired
+        on every delta exactly so it can serve as the fallback source.
+        Answers stay exact; callers flag them ``degraded=True``
+        (DESIGN.md Sec. 7)."""
+        if self.backend == "shard_map":
+            from . import distributed
+            try:
+                if kind == "reach":
+                    return distributed.dis_reach_batch_sharded(
+                        self.fr, pairs, mesh=self._mesh,
+                        placement=self.placement, chaos=self.chaos), False
+                if kind == "dist":
+                    return distributed.dis_dist_batch_sharded(
+                        self.fr, pairs, mesh=self._mesh,
+                        placement=self.placement, chaos=self.chaos), False
+                return distributed.dis_rpq_batch_sharded(
+                    self.fr, pairs, qa, mesh=self._mesh,
+                    placement=self.placement, chaos=self.chaos), False
+            except Exception:
+                self.stats.degraded_groups += 1
+                return self._execute_group_vmap(kind, pairs, qa), True
+        return self._execute_group_vmap(kind, pairs, qa), False
+
+    def _execute_group_vmap(self, kind: str, pairs, qa):
+        if self.chaos is not None:
+            self.chaos.maybe_fail("engine.vmap", pairs=pairs)
+        if kind == "reach":
+            return _cache.dis_reach_batch(self.fr, pairs)
+        if kind == "dist":
+            return _cache.dis_dist_batch(self.fr, pairs)
+        return _cache.dis_rpq_batch(self.fr, pairs, qa)
 
     def _run_group_uncached(self, group: ExecutionGroup, results) -> None:
         """Seed one-shot engine, one evaluation per query (cache='none')."""

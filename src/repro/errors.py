@@ -1,0 +1,87 @@
+"""Typed errors for the serving stack (DESIGN.md Sec. 7).
+
+Every failure the server can surface to a client is a subclass of
+:class:`ServingError`, so callers catch one base class and branch on type
+instead of string-matching messages.  The ``permanent`` attribute is the
+retry contract: the drain loop retries transient failures with capped
+exponential backoff but gives up immediately on permanent ones (a poison
+query fails the same way every time — backing off just wastes its
+batchmates' latency budgets).
+"""
+from __future__ import annotations
+
+
+class ServingError(Exception):
+    """Base class of every typed serving failure."""
+
+    #: retrying the same operation cannot succeed when True
+    permanent = False
+
+
+class QueryTooExpensive(ServingError):
+    """Admission control rejected a RED-lane query at ``submit`` time.
+
+    Carries the cost estimate and the limit it exceeded so clients can
+    split the query, raise their limit, or route it elsewhere.
+    """
+
+    permanent = True
+
+    def __init__(self, kind: str, estimate: float, limit: float):
+        self.kind = kind
+        self.estimate = float(estimate)
+        self.limit = float(limit)
+        super().__init__(
+            f"{kind} query cost estimate {self.estimate:.0f} exceeds the "
+            f"red-lane admission limit {self.limit:.0f} semiring ops")
+
+
+class DeadlineExceeded(ServingError):
+    """The request's latency budget expired before it was served; the
+    server fails it fast instead of computing an answer nobody is
+    waiting for."""
+
+    permanent = True
+
+    def __init__(self, message: str = "request deadline exceeded"):
+        super().__init__(message)
+
+
+class DeadLetterError(ServingError):
+    """A request kept failing after retries and batch bisection and was
+    quarantined into the server's ``dead_letters`` list.  ``cause`` is the
+    last underlying failure."""
+
+    permanent = True
+
+    def __init__(self, attempts: int, cause: BaseException):
+        self.attempts = int(attempts)
+        self.cause = cause
+        super().__init__(f"request dead-lettered after {self.attempts} "
+                         f"attempts: {cause!r}")
+
+
+class DeltaApplyFailed(ServingError):
+    """A :class:`~repro.core.fragments.GraphDelta` failed mid-apply and the
+    fragmentation + caches were rolled back to the pre-delta snapshot
+    (``arrays_version`` and ``cache_version`` unchanged; queries keep
+    answering against the pre-delta graph)."""
+
+    def __init__(self, cause: BaseException):
+        self.cause = cause
+        self.rolled_back = True
+        self.permanent = getattr(cause, "permanent", False)
+        super().__init__("graph delta failed and was rolled back "
+                         f"(pre-delta cache intact): {cause!r}")
+
+
+class InjectedFault(ServingError):
+    """Raised by :class:`repro.serve.faults.FaultInjector` at an injection
+    site.  ``permanent=True`` models a poison input that fails on every
+    attempt; the default models a transient fault retries can outlive."""
+
+    def __init__(self, site: str, detail: str = "", permanent: bool = False):
+        self.site = site
+        self.permanent = bool(permanent)
+        msg = f"injected fault at {site!r}"
+        super().__init__(msg + (f": {detail}" if detail else ""))

@@ -1,5 +1,16 @@
+from ..errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
+                      InjectedFault, QueryTooExpensive, ServingError)
+from .admission import (GREEN, LANES, RED, YELLOW, AdmissionPolicy,
+                        estimate_cost)
 from .engine import Request, ServeEngine
-from .query_server import QueryRequest, QueryServer, UpdateRequest
+from .faults import SITES, FaultInjector, FaultSpec
+from .query_server import (QueryRequest, QueryServer, RetryPolicy,
+                           UpdateRequest)
 
 __all__ = ["Request", "ServeEngine", "QueryRequest", "QueryServer",
-           "UpdateRequest"]
+           "UpdateRequest", "RetryPolicy",
+           "AdmissionPolicy", "estimate_cost",
+           "GREEN", "YELLOW", "RED", "LANES",
+           "FaultInjector", "FaultSpec", "SITES",
+           "ServingError", "QueryTooExpensive", "DeadlineExceeded",
+           "DeadLetterError", "DeltaApplyFailed", "InjectedFault"]

@@ -1,37 +1,83 @@
-"""Batched query-serving loop over a QuerySession (DESIGN.md Secs. 3.4 & 5).
+"""Fault-tolerant batched query serving over a QuerySession
+(DESIGN.md Secs. 3.4, 5 & 7).
 
-Mirrors the LM ``ServeEngine`` slots model for graph queries: requests
-accumulate in a queue and are drained in bounded-size chunks, each served
-by ONE ``session.run`` mixed batch — the session's planner fuses every
-chunk into one compiled execution per (kind, automaton) group, with batch
-sizes padded to buckets so the engine never retraces under bursty traffic.
-All three query classes are served, including regular path queries
-(``kind="rpq"`` with a regex or a prebuilt automaton).
+Requests accumulate in a queue and are drained in bounded-size chunks,
+each served by ONE ``session.run`` mixed batch — the session's planner
+fuses every chunk into one compiled execution per (kind, automaton)
+group, with batch sizes padded to buckets so the engine never retraces
+under bursty traffic.  All three query classes are served, including
+regular path queries (``kind="rpq"`` with a regex or automaton).
 
-Dynamic graphs: ``submit_delta`` enqueues a :class:`GraphDelta` *into the
-same queue*, so updates and queries interleave in submission order with
-snapshot consistency — every query submitted before an update is answered
-against the pre-delta cache (the drain loop flushes pending query batches
-before applying an update; a batch never spans an update boundary), and
-every query submitted after it sees the incrementally repaired cache.
-Answers are stamped with the ``cache_version`` they were computed against.
+Robustness (Sec. 7), layered on that loop:
 
-The first ``submit``/``drain`` against a fresh Fragmentation pays the
-amortized cache build; every batch after that is the cheap per-query
-phase only, and updates cost an incremental repair instead of a rebuild.
+* **Admission control** — ``submit`` estimates each query's cost from
+  fragmentation stats (:mod:`repro.serve.admission`) and routes it to the
+  GREEN (cheap) or YELLOW (expensive) lane; RED queries are rejected at
+  intake with a typed :class:`~repro.errors.QueryTooExpensive`.  The
+  drain flushes the green lane first, so cheap queries never queue
+  behind heavy ones.
+* **Deadlines** — ``submit(..., deadline_ms=)`` gives a request a latency
+  budget.  The drain ships a *partially-full* bucket when the oldest
+  budget in a lane is nearly spent, and fails already-expired requests
+  fast with :class:`~repro.errors.DeadlineExceeded` instead of serving
+  them arbitrarily late.
+* **Retry / bisect / dead-letter** — a failed chunk retries with capped
+  exponential backoff; permanent faults skip the backoff.  A chunk that
+  keeps failing is bisected so the poison request is quarantined into
+  ``dead_letters`` (status ``"dead_letter"``) while its batchmates are
+  served — a poison request can never block the queue.
+* **Update isolation** — ``submit_delta`` keeps snapshot consistency
+  (queries before an update answer pre-delta; a batch never spans an
+  update).  A failing delta is rolled back by the session
+  (:class:`~repro.errors.DeltaApplyFailed`; pre-delta cache intact),
+  recorded on its request (status ``"failed"``), and the drain continues.
+
+Every request reaches **exactly one** terminal status per submission:
+``done`` / ``dead_letter`` / ``deadline`` for queries, ``applied`` /
+``failed`` for updates — never lost, never double-served (asserted).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple, Union
+import time
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 from ..core.automaton import QueryAutomaton
 from ..core.fragments import Fragmentation, GraphDelta
 from ..core.incremental import UpdateStats
 from ..core.plan import Dist, Query, Reach, Rpq
 from ..core.session import QuerySession, connect
+from ..errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
+                      QueryTooExpensive)
+from .admission import GREEN, YELLOW, AdmissionPolicy, estimate_cost
+from .faults import FaultInjector
 
 VALID_KINDS = ("reach", "dist", "bounded", "rpq")
+
+# request lifecycle: PENDING -> exactly one terminal status
+PENDING = "pending"
+DONE = "done"                 # query answered (result filled)
+DEAD_LETTER = "dead_letter"   # query quarantined after retries + bisection
+DEADLINE = "deadline"         # query failed fast: budget expired unserved
+APPLIED = "applied"           # update applied (result = UpdateStats)
+FAILED = "failed"             # update failed and was rolled back
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Capped exponential backoff for transient serving failures: attempt
+    ``i`` (2nd, 3rd, ...) sleeps ``min(base * 2^(i-2), max)`` ms first.
+    Permanent faults (``exc.permanent``) skip retries entirely."""
+
+    max_attempts: int = 3
+    base_delay_ms: float = 5.0
+    max_delay_ms: float = 200.0
+
+    def delay_s(self, retry_index: int) -> float:
+        """Sleep before the ``retry_index``-th retry (1-based), seconds."""
+        ms = min(self.base_delay_ms * (2.0 ** (retry_index - 1)),
+                 self.max_delay_ms)
+        return ms / 1e3
 
 
 @dataclasses.dataclass
@@ -45,6 +91,14 @@ class QueryRequest:
     result: object = None            # bool / int-or-None once served
     # rvset-cache version the answer was computed against (snapshot id)
     cache_version: Optional[int] = None
+    # -- robustness metadata (DESIGN.md Sec. 7) -----------------------------
+    lane: str = GREEN                # admission lane (green / yellow)
+    cost: float = 0.0                # admission cost estimate, semiring ops
+    deadline: Optional[float] = None  # absolute clock() time, seconds
+    status: str = PENDING            # lifecycle (see module constants)
+    error: Optional[BaseException] = None   # terminal failure, if any
+    attempts: int = 0                # engine attempts this request rode in
+    degraded: bool = False           # served by the vmap fallback
 
     def to_query(self) -> Query:
         if self.kind == "reach":
@@ -61,28 +115,56 @@ class QueryRequest:
 class UpdateRequest:
     delta: GraphDelta
     result: Optional[UpdateStats] = None   # filled once applied
+    status: str = PENDING                  # applied / failed
+    error: Optional[BaseException] = None  # DeltaApplyFailed when failed
 
 
 class QueryServer:
-    """Bounded-batch continuous server over one (dynamic) Fragmentation."""
+    """Bounded-batch fault-tolerant server over one (dynamic)
+    Fragmentation."""
 
     def __init__(self, fr: Fragmentation, batch_size: int = 64,
                  warm: bool = True, with_dist: bool = False,
                  backend: str = "auto",
-                 session: Optional[QuerySession] = None):
+                 session: Optional[QuerySession] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 chaos: Optional[FaultInjector] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 ship_margin_ms: float = 25.0):
         """``with_dist=True`` eagerly builds the tropical cache too; the
         default leaves it to build lazily on the first dist/bounded query,
         so reach-only servers never pay for it.  Pass an existing
         ``session`` to share its caches/backend, or a ``backend`` name to
-        open a fresh one (see :func:`repro.connect`)."""
+        open a fresh one (see :func:`repro.connect`).
+
+        ``admission`` defaults to :meth:`AdmissionPolicy.for_fragmentation`
+        (meaningful lanes, no rejection); ``retry`` to a 3-attempt capped
+        backoff.  ``chaos`` threads a
+        :class:`~repro.serve.faults.FaultInjector` through the session.
+        ``clock``/``sleep`` are injectable for deterministic deadline and
+        backoff tests; ``ship_margin_ms`` is how close to the oldest
+        deadline the drain ships a partially-full bucket."""
         assert batch_size > 0
         self.fr = fr
         self.batch_size = batch_size
         self.with_dist = with_dist
-        self.session = session or connect(fr, backend=backend)
+        self.session = session or connect(fr, backend=backend, chaos=chaos)
+        if session is not None and chaos is not None:
+            session.chaos = chaos
+        self.admission = admission or AdmissionPolicy.for_fragmentation(fr)
+        self.retry = retry or RetryPolicy()
+        self._clock = clock
+        self._sleep = sleep
+        self.ship_margin = ship_margin_ms / 1e3
         self._queue: List[Union[QueryRequest, UpdateRequest]] = []
+        self.dead_letters: List[QueryRequest] = []
         self.batches_run = 0
         self.updates_applied = 0
+        self.updates_failed = 0
+        self.retries = 0          # extra engine attempts beyond the first
+        self.rejected = 0         # RED-lane submissions refused
         if warm:
             self.session.warm(with_dist=with_dist)
 
@@ -90,7 +172,16 @@ class QueryServer:
 
     def submit(self, s: int, t: int, kind: str = "reach",
                bound: Optional[int] = None, regex: Optional[str] = None,
-               automaton: Optional[QueryAutomaton] = None) -> QueryRequest:
+               automaton: Optional[QueryAutomaton] = None,
+               deadline_ms: Optional[float] = None) -> QueryRequest:
+        """Validate, admit, and enqueue one query.
+
+        Raises ``ValueError`` on malformed arguments (unknown kind, bad
+        kind/arg combination, endpoint outside ``[0, n)``) and
+        :class:`~repro.errors.QueryTooExpensive` when admission control
+        rejects the query; neither leaves anything queued.
+        ``deadline_ms`` gives the request a latency budget measured from
+        now (see :meth:`drain`)."""
         if kind not in VALID_KINDS:
             raise ValueError(f"unknown query kind {kind!r}; expected one "
                              f"of {VALID_KINDS}")
@@ -105,14 +196,46 @@ class QueryServer:
         if kind != "rpq" and (regex is not None or automaton is not None):
             raise ValueError(f"regex/automaton are only valid for "
                              f"kind='rpq', not {kind!r}")
-        req = QueryRequest(int(s), int(t), kind, bound, regex, automaton)
+        s, t = int(s), int(t)
+        n = self.fr.g.n
+        for name, v in (("s", s), ("t", t)):
+            if not 0 <= v < n:
+                raise ValueError(
+                    f"query endpoint {name}={v} is out of range for a "
+                    f"graph with {n} nodes (valid ids: 0..{n - 1})")
+        lane, cost = self._admit(kind, s, t, regex, automaton)
+        deadline = (None if deadline_ms is None
+                    else self._clock() + deadline_ms / 1e3)
+        req = QueryRequest(s, t, kind, bound, regex, automaton,
+                           lane=lane, cost=cost, deadline=deadline)
         self._queue.append(req)
         return req
+
+    def _admit(self, kind: str, s: int, t: int, regex, automaton):
+        """Admission decision: (lane, cost estimate).  Raises
+        :class:`~repro.errors.QueryTooExpensive` for the RED lane."""
+        states, cached = 1, True
+        if kind == "rpq":
+            qa = automaton
+            if qa is None:
+                qa = self.session._resolve_automaton(Rpq(s, t, regex=regex))
+            states = qa.n_states
+            c = self.fr.rvset_cache
+            cached = c is not None and qa.cache_key() in c.rpq_closures
+        cost = estimate_cost(self.fr, kind, states=states,
+                             closure_cached=cached)
+        try:
+            lane = self.admission.admit(kind, cost)
+        except QueryTooExpensive:
+            self.rejected += 1
+            raise
+        return lane, cost
 
     def submit_delta(self, delta: GraphDelta) -> UpdateRequest:
         """Enqueue a graph update.  It is applied during ``drain`` in
         submission order: earlier queries see the pre-delta snapshot,
-        later ones the repaired cache."""
+        later ones the repaired cache (or, if the delta fails and rolls
+        back, the unchanged pre-delta cache)."""
         req = UpdateRequest(delta)
         self._queue.append(req)
         return req
@@ -123,48 +246,121 @@ class QueryServer:
     # -- serving loop ------------------------------------------------------
 
     def drain(self) -> List[Union[QueryRequest, UpdateRequest]]:
-        """Serve the whole queue in submission order; returns the served
-        requests with ``result`` filled in.  Queries are drained in
-        bounded-size batches; an update first flushes the queries queued
-        before it (snapshot consistency), then repairs the cache."""
-        queue, self._queue = self._queue, []   # new submits go to a fresh
-        served: List[Union[QueryRequest, UpdateRequest]] = []   # queue
-        chunk: List[QueryRequest] = []         # never grows past batch_size
+        """Serve the whole queue; returns the requests in resolution order,
+        each with ``result``/``error`` filled and a terminal ``status``.
 
-        def flush():
-            while chunk:
-                batch = chunk[: self.batch_size]
-                self._serve_batch(batch)       # raises -> batch stays queued
-                del chunk[: len(batch)]
-                served.extend(batch)
+        Queries are bucketed per admission lane (green flushed first) in
+        bounded-size batches; a bucket also ships *early* when the oldest
+        deadline in its lane is within ``ship_margin`` of expiring.  An
+        update first flushes the queries queued before it (snapshot
+        consistency — reordering only ever happens between two updates),
+        then applies; failures never leave the queue blocked."""
+        queue, self._queue = self._queue, []   # new submits -> fresh queue
+        served: List[Union[QueryRequest, UpdateRequest]] = []
+        lanes = {GREEN: [], YELLOW: []}
 
-        idx = 0                                # next queue element to handle
-        try:
-            while idx < len(queue):
-                req = queue[idx]
-                idx += 1
-                if isinstance(req, UpdateRequest):
-                    try:
-                        flush()                # pre-delta queries answered
-                    except Exception:
-                        idx -= 1               # update untouched: retryable
-                        raise
-                    # a bad update is reported via the raised exception and
-                    # dropped; everything queued after it survives
-                    req.result = self.session.apply(req.delta)
-                    self.updates_applied += 1
-                    served.append(req)
-                else:
-                    chunk.append(req)
-                    if len(chunk) >= self.batch_size:
-                        flush()
-            flush()
-        except Exception:
-            # unserved queries + the un-iterated tail stay queued for the
-            # next drain (ahead of anything submitted meanwhile)
-            self._queue[:0] = chunk + queue[idx:]
-            raise
+        def flush(lane: str) -> None:
+            reqs = lanes[lane]
+            while reqs:
+                chunk = reqs[: self.batch_size]
+                del reqs[: len(chunk)]
+                self._serve_chunk(chunk, served)
+
+        def flush_all() -> None:
+            flush(GREEN)                       # low-latency lane first
+            flush(YELLOW)
+
+        for req in queue:
+            if isinstance(req, UpdateRequest):
+                flush_all()                    # pre-delta queries answered
+                self._apply_update(req, served)
+                continue
+            lane = req.lane if req.lane in lanes else GREEN
+            lanes[lane].append(req)
+            if (len(lanes[lane]) >= self.batch_size
+                    or self._deadline_pressed(lanes[lane])):
+                flush(lane)
+        flush_all()
         return served
+
+    def _deadline_pressed(self, reqs: List[QueryRequest]) -> bool:
+        """True when the oldest latency budget in the lane is nearly spent
+        — ship the partially-full bucket now rather than risk blowing it
+        while waiting for the bucket to fill."""
+        deadlines = [r.deadline for r in reqs if r.deadline is not None]
+        if not deadlines:
+            return False
+        return min(deadlines) - self._clock() <= self.ship_margin
+
+    def _serve_chunk(self, reqs: List[QueryRequest], served) -> None:
+        """Fail already-expired requests fast, then serve the rest with
+        retries."""
+        now = self._clock()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now >= r.deadline:
+                r.error = DeadlineExceeded(
+                    f"deadline expired {(now - r.deadline) * 1e3:.1f}ms "
+                    f"before the {r.kind} query ({r.s}, {r.t}) was served")
+                self._resolve(r, DEADLINE, served)
+            else:
+                live.append(r)
+        self._serve_with_retry(live, served)
+
+    def _serve_with_retry(self, reqs: List[QueryRequest], served) -> None:
+        """One chunk through the engine with capped-backoff retries; a
+        chunk that exhausts its retries is bisected so the poison request
+        is dead-lettered alone and its batchmates get served."""
+        if not reqs:
+            return
+        last: Optional[BaseException] = None
+        for attempt in range(1, self.retry.max_attempts + 1):
+            if attempt > 1:
+                self.retries += 1
+                self._sleep(self.retry.delay_s(attempt - 1))
+            for r in reqs:
+                r.attempts += 1
+            try:
+                self._serve_batch(reqs)
+            except Exception as exc:           # noqa: BLE001 — retried
+                last = exc
+                if getattr(exc, "permanent", False):
+                    break                      # retrying cannot help
+                continue
+            for r in reqs:
+                self._resolve(r, DONE, served)
+            return
+        if len(reqs) == 1:
+            r = reqs[0]
+            r.error = DeadLetterError(r.attempts, last)
+            self.dead_letters.append(r)
+            self._resolve(r, DEAD_LETTER, served)
+            return
+        mid = len(reqs) // 2                   # bisect: quarantine poison
+        self._serve_with_retry(reqs[:mid], served)
+        self._serve_with_retry(reqs[mid:], served)
+
+    def _apply_update(self, req: UpdateRequest, served) -> None:
+        """Apply one queued delta.  On failure the session has already
+        rolled back to the pre-delta snapshot; the failure is recorded on
+        the request and the drain continues — a poison delta never blocks
+        the requests queued behind it."""
+        try:
+            req.result = self.session.apply(req.delta)
+        except DeltaApplyFailed as exc:
+            req.error = exc
+            self.updates_failed += 1
+            self._resolve(req, FAILED, served)
+            return
+        self.updates_applied += 1
+        self._resolve(req, APPLIED, served)
+
+    def _resolve(self, req, status: str, served) -> None:
+        """Move a request to its terminal status — exactly once, ever."""
+        assert req.status == PENDING, \
+            f"request resolved twice ({req.status} -> {status}): {req!r}"
+        req.status = status
+        served.append(req)
 
     def _serve_batch(self, reqs: List[QueryRequest]) -> None:
         """ONE session.run mixed batch; the planner fuses it into one
@@ -173,6 +369,7 @@ class QueryServer:
         for r, res in zip(reqs, results):
             r.result = res.distance if r.kind == "dist" else res.answer
             r.cache_version = res.cache_version
+            r.degraded = res.degraded
         self.batches_run += 1
 
     # -- convenience -------------------------------------------------------

@@ -14,3 +14,18 @@ try:
 except ImportError:
     import _hypothesis_stub
     _hypothesis_stub.install(sys.modules)
+
+
+# jaxlib 0.4.x's CPU JIT sporadically segfaults in backend_compile once a
+# single process has accumulated enough live compiled executables (seen at
+# ~200 suite tests; reproducible at pristine checkouts, crash point moves
+# with compile count).  Dropping the caches between modules keeps the live
+# executable set small; each module only pays its own warm-up again.
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    import jax
+    jax.clear_caches()

@@ -22,7 +22,7 @@ from repro.core.incremental import (REBUILD_DEBT, changed_row_ids,
                                     pad_row_ids)
 from repro.graph import erdos_renyi, random_partition
 from repro.graph.graph import Graph
-from repro.serve import QueryServer
+from repro.serve import DeltaApplyFailed, QueryServer
 
 from oracles import oracle_dist, oracle_reach, oracle_rpq
 
@@ -258,22 +258,25 @@ def test_server_interleaved_updates_snapshot_consistency():
 
 
 def test_server_failed_update_preserves_later_requests():
-    """A bad update raises out of drain() but must not eat the queue:
-    pre-update queries are served, post-update requests stay pending."""
+    """A bad update resolves ``failed`` (typed, rolled back) and must not
+    eat the queue: pre- and post-update queries are served in the same
+    drain (PR 7 replaced the old raise-out-of-drain behavior)."""
     g, part, fr = _dynamic_case(16, 24, 2, seed=13)
     srv = QueryServer(fr, batch_size=4)
     present = set(zip(g.src.tolist(), g.dst.tolist()))
     missing = next((u, v) for u in range(g.n) for v in range(g.n)
                    if (u, v) not in present)
     q_before = srv.submit(0, 1)
-    srv.submit_delta(GraphDelta.delete([missing]))        # nonexistent edge
+    upd = srv.submit_delta(GraphDelta.delete([missing]))  # nonexistent edge
     q_after = srv.submit(2, 3)
-    with pytest.raises(ValueError):
-        srv.drain()
+    served = srv.drain()
     assert q_before.result == oracle_reach(g, 0, 1)       # flushed first
-    assert q_after.result is None and srv.pending() == 1  # survives
-    assert srv.drain() == [q_after]                       # retry serves it
-    assert q_after.result == oracle_reach(g, 2, 3)
+    assert upd.status == "failed" and srv.updates_failed == 1
+    assert isinstance(upd.error, DeltaApplyFailed) and upd.error.rolled_back
+    assert isinstance(upd.error.cause, ValueError)
+    assert q_after.result == oracle_reach(g, 2, 3)        # not blocked
+    assert srv.pending() == 0
+    assert sorted(map(id, served)) == sorted(map(id, [q_before, upd, q_after]))
 
 
 # ---------------------------------------------------------------------------
