@@ -34,7 +34,14 @@ shipping in an artifact:
   (every answered result exact against the delta-replay oracle) and a
   request ``success_rate`` >= 0.99 under the seeded 1% fault schedule,
   and the fast run's steady-state p95 per-query latency must not exceed
-  3x the committed value.
+  3x the committed value;
+* async continuous batching (``BENCH_pr8``): both runs must report
+  ``answers_ok`` (every mode of the equal-work comparison plus the
+  open-loop phase oracle-exact); the committed run's async engine must
+  at least match the synchronous drain pattern's throughput at equal
+  work (``throughput_ratio`` >= 1.0; the fast run gets a noise
+  allowance), and the fast run's open-loop p99 latency must stay within
+  3x the committed baseline (with a small-run absolute floor).
 
 Exits non-zero with a FAIL line per violated bound.
 """
@@ -53,6 +60,10 @@ MIN_FUSED_SPEEDUP_FAST = 1.3
 SHARDED_REGRESSION_FACTOR = 3.0
 MIN_CHAOS_SUCCESS_RATE = 0.99
 CHAOS_P95_REGRESSION_FACTOR = 3.0
+MIN_ASYNC_THROUGHPUT_RATIO_FULL = 1.0
+MIN_ASYNC_THROUGHPUT_RATIO_FAST = 0.7
+ASYNC_P99_REGRESSION_FACTOR = 3.0
+ASYNC_P99_FLOOR_MS = 50.0
 
 
 def _load(path: str) -> dict:
@@ -195,6 +206,46 @@ def main(argv=None) -> int:
         p95_fast <= CHAOS_P95_REGRESSION_FACTOR * p95_base,
         f"fast {p95_fast:.1f}us vs committed {p95_base:.1f}us "
         f"(limit {CHAOS_P95_REGRESSION_FACTOR}x)",
+    )
+
+    base8 = _load(f"{root}/BENCH_pr8.json")
+    fast8 = _load(f"{root}/BENCH_pr8.fast.json")
+    for tag, rep in (("committed", base8), ("fast", fast8)):
+        check(
+            f"async answers_ok ({tag})",
+            rep["answers_ok"],
+            "sync-drain, continuous, and open-loop answers all "
+            "oracle-exact",
+        )
+        check(
+            f"async route coverage ({tag})",
+            len(rep["open_loop"]["routes"]) >= 2,
+            f"open-loop telemetry saw routes "
+            f"{sorted(rep['open_loop']['routes'])}",
+        )
+    ratio_full = base8["throughput_ratio"]
+    check(
+        "async throughput_ratio (committed)",
+        ratio_full >= MIN_ASYNC_THROUGHPUT_RATIO_FULL,
+        f"committed async/sync {ratio_full:.2f}x "
+        f"(floor {MIN_ASYNC_THROUGHPUT_RATIO_FULL}x)",
+    )
+    ratio_fast = fast8["throughput_ratio"]
+    check(
+        "async throughput_ratio (fast run)",
+        ratio_fast >= MIN_ASYNC_THROUGHPUT_RATIO_FAST,
+        f"fast async/sync {ratio_fast:.2f}x "
+        f"(floor {MIN_ASYNC_THROUGHPUT_RATIO_FAST}x)",
+    )
+    p99_base = base8["open_loop"]["p99_ms"]
+    p99_fast = fast8["open_loop"]["p99_ms"]
+    p99_limit = max(ASYNC_P99_REGRESSION_FACTOR * p99_base,
+                    ASYNC_P99_FLOOR_MS)
+    check(
+        "async open-loop p99_ms",
+        p99_fast <= p99_limit,
+        f"fast {p99_fast:.1f}ms vs committed {p99_base:.1f}ms "
+        f"(limit {p99_limit:.1f}ms)",
     )
 
     if failures:

@@ -1,0 +1,180 @@
+"""Async continuous-batching serving vs the synchronous drain pattern
+(ISSUE-8 / DESIGN.md Sec. 8), plus an open-loop latency-by-route table.
+
+Two phases over one fragmentation and one mixed reach/dist/RPQ workload:
+
+* **equal-work throughput** — the same query list served (a) the PR-7
+  way: one caller thread submitting a bucket then blocking on a
+  synchronous barrier, round-tripping per bucket; and (b) the PR-8 way:
+  concurrent submitter threads streaming the whole workload into a
+  running scheduler and blocking only on their own futures.  Work is
+  identical (same queries, same batch size, warm caches/compiles), so
+  the ratio isolates what continuous batching buys: intake overlaps
+  execution instead of serializing with it.  ``check_regression`` gates
+  ``throughput_ratio`` (async must not lose to the barrier pattern).
+* **open-loop latency** — arrivals paced on a fixed schedule at ~half
+  the measured async capacity (open loop: the schedule never waits for
+  completions, so queueing shows up in the numbers instead of being
+  hidden by back-pressure).  Per-route p50/p95/p99 come straight from
+  the server's live telemetry; ``check_regression`` bounds the fast
+  run's p99 against the committed baseline.
+
+All answers (both phases, every mode) are verified against the
+networkx oracles; ``answers_ok`` gates in CI.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import sys
+import threading
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import build_query_automaton, fragment_graph
+from repro.graph import erdos_renyi, random_partition
+from repro.serve import QueryServer
+from repro.serve.telemetry import percentile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from oracles import oracle_dist, oracle_reach, oracle_rpq  # noqa: E402
+
+RESULT_TIMEOUT_S = 600.0
+KINDS = ("reach", "dist", "rpq")
+
+
+def _workload(g, n_q: int, rng) -> List[Tuple[int, int, str]]:
+    return [(int(rng.integers(g.n)), int(rng.integers(g.n)),
+             KINDS[i % len(KINDS)]) for i in range(n_q)]
+
+
+def _check_answers(g, qa, served) -> bool:
+    ok = True
+    for s, t, kind, fut in served:
+        if kind == "reach":
+            want = oracle_reach(g, s, t)
+        elif kind == "dist":
+            want = oracle_dist(g, s, t)
+        else:
+            want = oracle_rpq(g, s, t, qa)
+        ok = ok and fut.value == want
+    return ok
+
+
+def exp_async_serve(n: int = 900, m: int = 3600, k: int = 4,
+                    n_q: int = 240, workers: int = 6, batch_size: int = 16,
+                    open_loop_n: int = 120, repeats: int = 3,
+                    seed: int = 7) -> Dict:
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    fr = fragment_graph(g, random_partition(g, k, 1), k)
+    qa = build_query_automaton("(0|1)*", lambda x: int(x))
+    rng = np.random.default_rng(2)
+    work = _workload(g, n_q, rng)
+
+    def submit_one(srv, s, t, kind):
+        if kind == "rpq":
+            return srv.submit(s, t, kind="rpq", automaton=qa)
+        return srv.submit(s, t, kind=kind)
+
+    # -- warmup: caches + every (kind, bucket-shape) compile out of the
+    #    timings (chunks pad to powers of two, so size-1 and size-batch
+    #    flushes cover both shapes each kind can ship as)
+    warm = QueryServer(fr, batch_size=batch_size, with_dist=True,
+                       start=False)
+    for size in (1, batch_size):
+        for kind in KINDS:
+            for s, t, _ in work[:size]:
+                submit_one(warm, s, t, kind)
+            warm.flush()
+    warm.close()
+
+    # -- phase A: equal work, barrier round-trips vs continuous batching
+    def sync_pass() -> Tuple[float, list]:
+        srv = QueryServer(fr, batch_size=batch_size, warm=False,
+                          start=False)
+        served = []
+        t0 = time.perf_counter()
+        for i in range(0, len(work), batch_size):
+            for s, t, kind in work[i:i + batch_size]:
+                served.append((s, t, kind, submit_one(srv, s, t, kind)))
+            srv.flush()                  # the PR-7 submit/drain round-trip
+        elapsed = time.perf_counter() - t0
+        srv.close()
+        return elapsed, served
+
+    def async_pass() -> Tuple[float, list]:
+        srv = QueryServer(fr, batch_size=batch_size, warm=False,
+                          batch_wait_ms=1.0)
+        slices = [work[w::workers] for w in range(workers)]
+        served = [[] for _ in range(workers)]
+
+        def run_worker(w):
+            for s, t, kind in slices[w]:
+                served[w].append((s, t, kind, submit_one(srv, s, t, kind)))
+            for *_, fut in served[w]:
+                fut.result(timeout=RESULT_TIMEOUT_S)
+
+        threads = [threading.Thread(target=run_worker, args=(w,))
+                   for w in range(workers)]
+        t0 = time.perf_counter()
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        elapsed = time.perf_counter() - t0
+        srv.close()
+        return elapsed, [x for sub in served for x in sub]
+
+    answers_ok = True
+    sync_s, async_s = [], []
+    for _ in range(repeats):
+        el, served = sync_pass()
+        sync_s.append(el)
+        answers_ok = answers_ok and _check_answers(g, qa, served)
+        el, served = async_pass()
+        async_s.append(el)
+        answers_ok = answers_ok and _check_answers(g, qa, served)
+    sync_qps = n_q / statistics.median(sync_s)
+    async_qps = n_q / statistics.median(async_s)
+
+    # -- phase B: open-loop arrivals at ~half capacity, latency by route
+    offered_qps = max(50.0, 0.5 * async_qps)
+    open_work = _workload(g, open_loop_n, rng)
+    srv = QueryServer(fr, batch_size=batch_size, warm=False,
+                      batch_wait_ms=2.0)
+    served = []
+    t0 = time.perf_counter()
+    for i, (s, t, kind) in enumerate(open_work):
+        lag = t0 + i / offered_qps - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)              # fixed schedule, never back-off
+        served.append((s, t, kind, submit_one(srv, s, t, kind)))
+    for *_, fut in served:
+        fut.result(timeout=RESULT_TIMEOUT_S)
+    elapsed = time.perf_counter() - t0
+    snap = srv.telemetry()
+    srv.close()
+    answers_ok = answers_ok and _check_answers(g, qa, served)
+    lat_ms = [fut.latency_s * 1e3 for *_, fut in served]
+
+    return {
+        "backend": "vmap",
+        "n": n, "m": m, "k": k, "n_queries": n_q,
+        "workers": workers, "batch_size": batch_size,
+        "sync_qps": sync_qps,
+        "async_qps": async_qps,
+        "throughput_ratio": async_qps / sync_qps,
+        "answers_ok": bool(answers_ok),
+        "open_loop": {
+            "n": open_loop_n,
+            "offered_qps": offered_qps,
+            "achieved_qps": open_loop_n / elapsed,
+            "p50_ms": percentile(lat_ms, 0.50),
+            "p95_ms": percentile(lat_ms, 0.95),
+            "p99_ms": percentile(lat_ms, 0.99),
+            "batch_occupancy": snap["batch_occupancy"],
+            "routes": snap["routes"],
+        },
+    }

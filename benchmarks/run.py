@@ -16,6 +16,7 @@ import sys
 import traceback
 
 from . import paper_experiments as pe
+from .exp_async_serve import exp_async_serve
 
 
 def _emit(section: str, rows):
@@ -176,12 +177,38 @@ def main() -> None:
                        "fast_mode": fast, **res}, f, indent=2)
         print(f"# wrote {out}")
 
+    def async_serve():
+        res = exp_async_serve(n=int(800 * scale) + 100,
+                              m=int(3200 * scale) + 400,
+                              n_q=96 if fast else 240,
+                              open_loop_n=48 if fast else 120,
+                              repeats=2 if fast else 3)
+        print(f"async_serve/continuous,{1e6 / res['async_qps']:.1f},"
+              f"qps={res['async_qps']:.0f};"
+              f"throughput_ratio={res['throughput_ratio']:.2f};"
+              f"answers_ok={res['answers_ok']}")
+        print(f"async_serve/sync_drain,{1e6 / res['sync_qps']:.1f},"
+              f"qps={res['sync_qps']:.0f}")
+        ol = res["open_loop"]
+        print(f"async_serve/open_loop,{ol['p99_ms'] * 1e3:.1f},"
+              f"p50_ms={ol['p50_ms']:.1f};p95_ms={ol['p95_ms']:.1f};"
+              f"p99_ms={ol['p99_ms']:.1f};"
+              f"offered_qps={ol['offered_qps']:.0f};"
+              f"occupancy={ol['batch_occupancy']:.2f}")
+        out = "BENCH_pr8" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "async_continuous_batching",
+                       "fast_mode": fast, **res}, f, indent=2)
+        print(f"# wrote {out}")
+
     section("# ISSUE-5: sharded one-collective batches, all query kinds",
             sharded_mixed)
     section("# ISSUE-6: k >> d scale-out, fragments packed per device",
             scaleout)
     section("# ISSUE-7: fault-tolerant serving under a seeded 1% fault "
             "schedule", chaos_bench)
+    section("# ISSUE-8: continuous-batching async serving vs the sync "
+            "drain pattern", async_serve)
 
     if failures:
         print(f"# FAILED sections ({len(failures)}): {failures}",

@@ -23,9 +23,9 @@ from .core.fragments import Placement
 from .core.plan import Dist, Query, QueryResult, Reach, Rpq
 from .core.session import QuerySession, connect
 from .errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
-                     InjectedFault, QueryTooExpensive, ServingError)
+                     InjectedFault, QueryTooExpensive, ServingError, Status)
 
-__all__ = ["connect", "QuerySession", "QueryResult",
+__all__ = ["connect", "QuerySession", "QueryResult", "Status",
            "Reach", "Dist", "Rpq", "Query", "Placement",
            "ServingError", "QueryTooExpensive", "DeadlineExceeded",
            "DeadLetterError", "DeltaApplyFailed", "InjectedFault"]

@@ -6,24 +6,23 @@ localEval into a once-per-Fragmentation closure phase and a cheap per-query
 phase, and a :class:`~repro.core.session.QuerySession`
 (``repro.connect(fr)``) plans heterogeneous reach+dist+RPQ batches into
 fused fixed-shape executions — one compiled program per (kind, automaton)
-group.  The ``dis_*`` free functions are shims over default sessions.
+group.  The seed ``dis_*`` free functions are shims over default
+sessions; the PR-4-deprecated cache-bearing ``dis_*_cached`` /
+``dis_*_batch`` shims were removed in PR 8 (use a session).
 """
-from .api import (QueryResult, dis_dist, dis_dist_batch, dis_dist_cached,
-                  dis_reach, dis_reach_batch, dis_reach_cached, dis_rpq,
-                  dis_rpq_batch, dis_rpq_cached, dis_rpq_regex)
+from .api import dis_dist, dis_reach, dis_rpq, dis_rpq_regex
 from .automaton import QueryAutomaton, accepts, build_query_automaton
 from .cache import RvsetCache, get_rvset_cache, prepare_rvset_cache
 from .engine import INF, QueryStats
 from .fragments import (DeltaReport, Fragmentation, GraphDelta, Placement,
                         fragment_graph, query_slots)
 from .incremental import UpdateStats, apply_delta
-from .plan import Dist, ExecutionGroup, Query, QueryPlan, Reach, Rpq
+from .plan import (Dist, ExecutionGroup, Query, QueryPlan, QueryResult,
+                   Reach, Rpq)
 from .session import QuerySession, SessionStats, connect
 
 __all__ = [
     "QueryResult", "dis_dist", "dis_reach", "dis_rpq", "dis_rpq_regex",
-    "dis_reach_batch", "dis_dist_batch", "dis_rpq_batch",
-    "dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
     "RvsetCache", "prepare_rvset_cache", "get_rvset_cache",
     "QueryAutomaton", "accepts", "build_query_automaton",
     "INF", "QueryStats", "Fragmentation", "fragment_graph", "query_slots",

@@ -8,22 +8,18 @@ callers of the original API:
 * ``dis_reach`` / ``dis_dist`` / ``dis_rpq`` / ``dis_rpq_regex`` — the
   paper's one-shot algorithms (Figs. 3-7); they run on the uncached default
   session (full localEval + evalDG per query, no state left behind).
-* ``dis_*_cached`` / ``dis_*_batch`` — the amortized-cache entry points;
-  they run on the cached default session and emit a
-  ``DeprecationWarning``: new code should hold a session and ``run()``
-  mixed batches instead (repro-internal modules are forbidden from calling
-  them — the test suite escalates their warnings to errors inside
-  ``repro.*``).
+
+The cache-bearing ``dis_*_cached`` / ``dis_*_batch`` shims that lived
+here were deprecated in PR 4 and removed in PR 8: hold a session
+(``repro.connect(fr)``) and ``run()`` mixed batches instead.  (The
+internal fused-batch engines keep their homes in
+:mod:`repro.core.cache`.)
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
-import numpy as np
-
 from .automaton import QueryAutomaton, build_query_automaton
-from .cache import _as_pairs
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, fragment_graph, query_slots
 from .plan import Dist, QueryResult, Reach, Rpq
@@ -31,19 +27,9 @@ from .session import connect, default_session
 
 __all__ = [
     "QueryResult", "dis_reach", "dis_dist", "dis_rpq", "dis_rpq_regex",
-    "dis_reach_batch", "dis_dist_batch", "dis_rpq_batch",
-    "dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
     "QueryAutomaton", "build_query_automaton", "connect",
     "Fragmentation", "fragment_graph", "query_slots", "INF", "QueryStats",
 ]
-
-
-def _warn_deprecated(name: str, hint: str) -> None:
-    # stacklevel=3 attributes the warning to whoever called the shim, so
-    # the repro.* -> error filter in pyproject catches internal callers
-    warnings.warn(
-        f"repro.core.{name} is deprecated: open a session with "
-        f"repro.connect(fr) and {hint}", DeprecationWarning, stacklevel=3)
 
 
 # ---------------------------------------------------------------------------
@@ -78,60 +64,3 @@ def dis_rpq_regex(fr: Fragmentation, s: int, t: int, regex: str,
     else:
         qa = build_query_automaton(regex, lambda name: int(name))
     return dis_rpq(fr, s, t, qa, **kw)
-
-
-# ---------------------------------------------------------------------------
-# amortized-cache paths: cached default session (deprecated shims)
-# ---------------------------------------------------------------------------
-
-def dis_reach_cached(fr: Fragmentation, s: int, t: int) -> QueryResult:
-    """disReach against the rvset cache (built on first use)."""
-    _warn_deprecated("dis_reach_cached", "run([Reach(s, t)])")
-    return default_session(fr).run([Reach(int(s), int(t))])[0]
-
-
-def dis_dist_cached(fr: Fragmentation, s: int, t: int,
-                    bound: Optional[int] = None) -> QueryResult:
-    _warn_deprecated("dis_dist_cached", "run([Dist(s, t, bound)])")
-    return default_session(fr).run([Dist(int(s), int(t), bound=bound)])[0]
-
-
-def dis_rpq_cached(fr: Fragmentation, s: int, t: int,
-                   qa: QueryAutomaton) -> QueryResult:
-    _warn_deprecated("dis_rpq_cached", "run([Rpq(s, t, automaton=qa)])")
-    return default_session(fr).run([Rpq(int(s), int(t), automaton=qa)])[0]
-
-
-def dis_reach_batch(fr: Fragmentation, pairs) -> np.ndarray:
-    """Answer N (s, t) reachability queries in one fused execution.
-    Returns [N] bool."""
-    _warn_deprecated("dis_reach_batch", "run([Reach(s, t), ...])")
-    qs = [Reach(int(s), int(t)) for s, t in _as_pairs(pairs)]
-    res = default_session(fr).run(qs)
-    return np.array([r.answer for r in res], dtype=bool)
-
-
-def dis_dist_batch(fr: Fragmentation, pairs,
-                   bound: Optional[int] = None) -> np.ndarray:
-    """N shortest distances (or bounded-reachability answers when ``bound``
-    is given: dist <= bound).  Returns [N] int64 distances with -1 for
-    unreachable, or [N] bool when ``bound`` is not None."""
-    _warn_deprecated("dis_dist_batch", "run([Dist(s, t, bound), ...])")
-    qs = [Dist(int(s), int(t)) for s, t in _as_pairs(pairs)]
-    if not qs:
-        return np.zeros(0, dtype=bool if bound is not None else np.int64)
-    res = default_session(fr).run(qs)
-    d = np.array([-1 if r.distance is None else r.distance for r in res],
-                 dtype=np.int64)
-    if bound is not None:
-        return (d >= 0) & (d <= bound)
-    return d
-
-
-def dis_rpq_batch(fr: Fragmentation, pairs, qa: QueryAutomaton) -> np.ndarray:
-    """N regular path queries for one automaton in one fused execution.
-    Returns [N] bool."""
-    _warn_deprecated("dis_rpq_batch", "run([Rpq(s, t, automaton=qa), ...])")
-    qs = [Rpq(int(s), int(t), automaton=qa) for s, t in _as_pairs(pairs)]
-    res = default_session(fr).run(qs)
-    return np.array([r.answer for r in res], dtype=bool)

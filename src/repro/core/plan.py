@@ -31,6 +31,7 @@ from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..errors import Status
 from .automaton import QueryAutomaton
 from .engine import QueryStats
 
@@ -143,6 +144,10 @@ class QueryResult:
     # answer was served by the vmap fallback instead (still exact; see
     # DESIGN.md Sec. 7)
     degraded: bool = False
+    # lifecycle state; the session only ever returns answered results, so
+    # this is DONE everywhere a result exists — serving futures reuse the
+    # same enum for their richer terminal states (DESIGN.md Sec. 8)
+    status: Status = Status.DONE
 
 
 # ---------------------------------------------------------------------------

@@ -14,13 +14,14 @@ compiled batched execution — reach and dist through the PR-2 kernels, RPQs
 through the batched product-closure path — returning
 :class:`~repro.core.plan.QueryResult`\\ s in submission order.
 
-The legacy free functions (``dis_reach``, ``dis_reach_cached``, ...) are
+The seed free functions (``dis_reach``, ``dis_dist``, ``dis_rpq``) are
 thin shims over per-fragmentation default sessions (see ``core.api``);
 everything inside ``src/repro`` talks to the session directly.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
@@ -29,7 +30,7 @@ import numpy as np
 
 from . import cache as _cache
 from . import engine, incremental
-from ..errors import DeltaApplyFailed
+from ..errors import DeltaApplyFailed, Status
 from .automaton import QueryAutomaton, build_query_automaton
 from .engine import INF, QueryStats
 from .fragments import Fragmentation, GraphDelta, Placement, query_slots
@@ -144,13 +145,18 @@ class QuerySession:
         self.stats = SessionStats()
         self.last_plan: Optional[QueryPlan] = None
         self._regex_cache: Dict[str, QueryAutomaton] = {}
+        # serializes group execution and delta application so several
+        # server threads can share one session over the same caches; an
+        # RLock because run() resolves automatons (also locked) inline
+        self._lock = threading.RLock()
 
     # -- cache lifecycle ---------------------------------------------------
 
     def warm(self, with_dist: bool = False) -> "QuerySession":
         """Eagerly build the amortized caches (no-op for cache='none')."""
-        if self.cache_mode == "amortized":
-            _cache.prepare_rvset_cache(self.fr, with_dist=with_dist)
+        with self._lock:
+            if self.cache_mode == "amortized":
+                _cache.prepare_rvset_cache(self.fr, with_dist=with_dist)
         return self
 
     @property
@@ -181,20 +187,22 @@ class QuerySession:
         unchanged, subsequent queries answer against the pre-delta graph)
         and a typed :class:`~repro.errors.DeltaApplyFailed` wrapping the
         cause is raised (DESIGN.md Sec. 7)."""
-        self.stats.updates += 1
-        snap = self.fr.snapshot()
-        try:
-            if (self.backend == "shard_map"
-                    and self.fr.rvset_cache is not None):
-                from . import distributed
-                return distributed.apply_delta_sharded(
-                    self.fr, delta, mesh=self._mesh,
-                    placement=self.placement, chaos=self.chaos)
-            return incremental.apply_delta(self.fr, delta, chaos=self.chaos)
-        except Exception as exc:
-            self.fr.restore(snap)
-            self.stats.rollbacks += 1
-            raise DeltaApplyFailed(exc) from exc
+        with self._lock:
+            self.stats.updates += 1
+            snap = self.fr.snapshot()
+            try:
+                if (self.backend == "shard_map"
+                        and self.fr.rvset_cache is not None):
+                    from . import distributed
+                    return distributed.apply_delta_sharded(
+                        self.fr, delta, mesh=self._mesh,
+                        placement=self.placement, chaos=self.chaos)
+                return incremental.apply_delta(self.fr, delta,
+                                               chaos=self.chaos)
+            except Exception as exc:
+                self.fr.restore(snap)
+                self.stats.rollbacks += 1
+                raise DeltaApplyFailed(exc) from exc
 
     # -- query execution ---------------------------------------------------
 
@@ -206,24 +214,30 @@ class QuerySession:
         by one compiled batched execution (``cache='amortized'``) or by
         per-query seed evaluations (``cache='none'``).  Every result is
         stamped with the cache snapshot it was computed against.
+
+        Thread-safe: the whole batch runs under the session lock, so a
+        concurrent :meth:`apply` can never move the snapshot between a
+        group's execution and its ``cache_version`` stamp.
         """
         if isinstance(queries, (Reach, Dist, Rpq)):
             queries = [queries]
         queries = list(queries)
-        plan = plan_queries(queries, self._resolve_automaton)
-        self.last_plan = plan
-        results: List[Optional[QueryResult]] = [None] * len(queries)
-        for group in plan.groups:
-            if self.cache_mode == "amortized":
-                self._run_group_cached(group, results)
-            else:
-                self._run_group_uncached(group, results)
-        # uncached execution never consults the cache: stamp None even if a
-        # cache happens to exist on the shared fragmentation
-        version = (self.cache_version if self.cache_mode == "amortized"
-                   else None)
+        with self._lock:
+            plan = plan_queries(queries, self._resolve_automaton)
+            self.last_plan = plan
+            results: List[Optional[QueryResult]] = [None] * len(queries)
+            for group in plan.groups:
+                if self.cache_mode == "amortized":
+                    self._run_group_cached(group, results)
+                else:
+                    self._run_group_uncached(group, results)
+            # uncached execution never consults the cache: stamp None even
+            # if a cache happens to exist on the shared fragmentation
+            version = (self.cache_version if self.cache_mode == "amortized"
+                       else None)
         for r in results:
             r.cache_version = version
+            r.status = Status.DONE
         self.stats.queries += len(queries)
         self.stats.batches += 1
         return results  # type: ignore[return-value]
@@ -246,14 +260,15 @@ class QuerySession:
     def _resolve_automaton(self, q: Rpq) -> QueryAutomaton:
         if q.automaton is not None:
             return q.automaton
-        qa = self._regex_cache.get(q.regex)
-        if qa is None:
-            g = self.fr.g
-            label_of = (g.label_of if g.label_names is not None
-                        else (lambda name: int(name)))
-            qa = build_query_automaton(q.regex, label_of)
-            self._regex_cache[q.regex] = qa
-        return qa
+        with self._lock:
+            qa = self._regex_cache.get(q.regex)
+            if qa is None:
+                g = self.fr.g
+                label_of = (g.label_of if g.label_names is not None
+                            else (lambda name: int(name)))
+                qa = build_query_automaton(q.regex, label_of)
+                self._regex_cache[q.regex] = qa
+            return qa
 
     def _run_group_cached(self, group: ExecutionGroup, results) -> None:
         """One compiled batched execution for the whole group (padded to

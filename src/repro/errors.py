@@ -1,14 +1,52 @@
-"""Typed errors for the serving stack (DESIGN.md Sec. 7).
+"""Typed errors and lifecycle states for the serving stack (DESIGN.md
+Sec. 7–8).
 
 Every failure the server can surface to a client is a subclass of
 :class:`ServingError`, so callers catch one base class and branch on type
 instead of string-matching messages.  The ``permanent`` attribute is the
-retry contract: the drain loop retries transient failures with capped
+retry contract: the scheduler retries transient failures with capped
 exponential backoff but gives up immediately on permanent ones (a poison
 query fails the same way every time — backing off just wastes its
 batchmates' latency budgets).
+
+:class:`Status` is the one lifecycle enum shared by the whole stack:
+query/update futures (:mod:`repro.serve.engine`), session results
+(:class:`repro.core.plan.QueryResult`), and the error taxonomy here
+(each terminal failure class carries the ``status`` it resolves a future
+to).  It subclasses :class:`str`, so ``Status.DONE == "done"`` holds and
+pre-enum callers that compared against string literals keep working.
 """
 from __future__ import annotations
+
+import enum
+
+
+class Status(str, enum.Enum):
+    """Lifecycle of a submitted request (query or graph update).
+
+    ``PENDING`` -> queued, not yet picked up by the scheduler;
+    ``RUNNING`` -> popped into an executing batch;
+    terminal states: ``DONE`` (query answered), ``DEAD_LETTER`` (query
+    quarantined after retries + bisection), ``DEADLINE`` (latency budget
+    expired before service), ``APPLIED`` (delta landed), ``FAILED``
+    (delta rolled back).
+    """
+
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    DEAD_LETTER = "dead_letter"
+    DEADLINE = "deadline"
+    APPLIED = "applied"
+    FAILED = "failed"
+
+    @property
+    def terminal(self) -> bool:
+        """True once a future carrying this status will never change."""
+        return self not in (Status.PENDING, Status.RUNNING)
+
+    def __str__(self) -> str:  # repr-friendly: "done", not "Status.DONE"
+        return self.value
 
 
 class ServingError(Exception):
@@ -16,6 +54,10 @@ class ServingError(Exception):
 
     #: retrying the same operation cannot succeed when True
     permanent = False
+
+    #: terminal :class:`Status` a future resolves to when this error is
+    #: its outcome (``FAILED`` unless a subclass is more specific)
+    status = Status.FAILED
 
 
 class QueryTooExpensive(ServingError):
@@ -42,6 +84,7 @@ class DeadlineExceeded(ServingError):
     waiting for."""
 
     permanent = True
+    status = Status.DEADLINE
 
     def __init__(self, message: str = "request deadline exceeded"):
         super().__init__(message)
@@ -53,6 +96,7 @@ class DeadLetterError(ServingError):
     last underlying failure."""
 
     permanent = True
+    status = Status.DEAD_LETTER
 
     def __init__(self, attempts: int, cause: BaseException):
         self.attempts = int(attempts)
@@ -66,6 +110,8 @@ class DeltaApplyFailed(ServingError):
     fragmentation + caches were rolled back to the pre-delta snapshot
     (``arrays_version`` and ``cache_version`` unchanged; queries keep
     answering against the pre-delta graph)."""
+
+    status = Status.FAILED
 
     def __init__(self, cause: BaseException):
         self.cause = cause

@@ -1,67 +1,589 @@
-"""Batched serving loop: prefill + greedy decode with a KV cache.
+"""Continuous-batching async engine for distributed reachability serving
+(DESIGN.md Sec. 8).
 
-The decode step is the unit the decode_* / long_* dry-run cells lower; this
-module adds the request-level machinery around it (continuous batching of
-a request queue into fixed-size decode batches, per-request stop lengths).
+Concurrent submitters enqueue typed requests and immediately receive
+awaitable futures (:class:`QueryFuture` / :class:`UpdateFuture`); a
+background scheduler thread continuously forms bounded-size chunks from
+whatever is pending and executes each as ONE ``session.run`` mixed batch
+— the session planner fuses the chunk into one compiled execution per
+(kind, automaton) group, so the paper's one-collective-per-group
+guarantee is preserved under continuous load.
+
+Scheduling model:
+
+* The intake queue is a sequence of **segments** separated by graph
+  updates.  A delta is a natural snapshot barrier: every query submitted
+  before it is served before the delta applies (pre-delta futures answer
+  against the pre-delta ``cache_version``), and queries submitted after
+  it wait behind it.  Fencing is therefore structural — no timestamps,
+  no read locks on the cache.
+* Within a segment, requests sit in their admission lane (GREEN first,
+  then YELLOW, PR-7 semantics).  A chunk ships when the lane holds a full
+  batch, a barrier or flush is pending behind it, the oldest deadline in
+  the lane is within ``ship_margin`` of expiring (partial-bucket
+  shipping), or the oldest request has waited ``batch_wait`` — the knob
+  that trades per-request latency for batch occupancy.
+* Execution reuses the PR-7 robustness stack unchanged: expired requests
+  fail fast with :class:`~repro.errors.DeadlineExceeded`, failed chunks
+  retry with capped exponential backoff, chunks that keep failing are
+  bisected until the poison request is quarantined alone
+  (:class:`~repro.errors.DeadLetterError`), and a failing delta rolls
+  back and resolves its future ``FAILED`` without blocking the queue.
+
+Every future reaches **exactly one** terminal :class:`~repro.errors.Status`
+(asserted), and every resolution feeds the live
+:class:`~repro.serve.telemetry.Telemetry` layer.
+
+The engine also runs *without* a scheduler thread (``start()`` never
+called): requests defer until :meth:`flush`, which runs the same
+scheduling loop inline — the deterministic mode tests and the PR-7
+``drain()`` compatibility path use.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List, Optional
+import threading
+import time
+from typing import Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..models import transformer as T
+from ..core.automaton import QueryAutomaton
+from ..core.fragments import GraphDelta
+from ..core.plan import Dist, Query, Reach, Rpq
+from ..core.session import QuerySession
+from ..errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
+                      Status)
+from .admission import GREEN, YELLOW
+from .telemetry import Telemetry
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray             # [S] int32
-    max_new_tokens: int = 16
-    generated: Optional[List[int]] = None
+class RetryPolicy:
+    """Capped exponential backoff for transient serving failures: attempt
+    ``i`` (2nd, 3rd, ...) sleeps ``min(base * 2^(i-2), max)`` ms first.
+    Permanent faults (``exc.permanent``) skip retries entirely."""
+
+    max_attempts: int = 3
+    base_delay_ms: float = 5.0
+    max_delay_ms: float = 200.0
+
+    def delay_s(self, retry_index: int) -> float:
+        """Sleep before the ``retry_index``-th retry (1-based), seconds."""
+        ms = min(self.base_delay_ms * (2.0 ** (retry_index - 1)),
+                 self.max_delay_ms)
+        return ms / 1e3
 
 
-class ServeEngine:
-    """Fixed-batch continuous decoder (slots model, vLLM-style scheduling
-    at toy scale)."""
+class _Future:
+    """Common awaitable machinery for query and update futures."""
 
-    def __init__(self, cfg: T.LMConfig, params, batch: int, max_len: int):
-        self.cfg, self.params = cfg, params
-        self.batch, self.max_len = batch, max_len
-        self._decode = jax.jit(
-            lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos))
+    def __init__(self):
+        self._event = threading.Event()
+        self._seq: Optional[int] = None     # global resolution order
+        self.status: Status = Status.PENDING
+        self.value: object = None           # raw result once resolved
+        self.error: Optional[BaseException] = None
+        self.submitted_at: Optional[float] = None   # engine clock
+        self.resolved_at: Optional[float] = None
 
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve a queue of requests in fixed-size batches."""
-        out: List[Request] = []
-        for i in range(0, len(requests), self.batch):
-            out.extend(self._serve_batch(requests[i:i + self.batch]))
+    def done(self) -> bool:
+        """True once the future holds a terminal status."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until resolved and return the value, or raise the typed
+        terminal error (``DeadlineExceeded`` / ``DeadLetterError`` /
+        ``DeltaApplyFailed``).  Raises :class:`TimeoutError` if the future
+        is still unresolved after ``timeout`` seconds — including on a
+        server that was constructed with ``start=False`` and not flushed.
+        """
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"{type(self).__name__} unresolved after "
+                f"{timeout!r}s (status {self.status}); deferred servers "
+                "(start=False) need flush() before result() returns")
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit-to-resolve latency on the engine clock (None while
+        pending)."""
+        if self.resolved_at is None or self.submitted_at is None:
+            return None
+        return self.resolved_at - self.submitted_at
+
+
+class QueryFuture(_Future):
+    """Awaitable handle for one submitted query.
+
+    Returned by :meth:`repro.serve.QueryServer.submit`; not constructed
+    directly.  ``result()`` blocks for the answer (bool for
+    reach/bounded/rpq, hop count or None for dist); ``value`` is the
+    non-blocking raw view (None until resolved), ``status`` the live
+    :class:`~repro.errors.Status`.  ``cache_version`` is the rvset-cache
+    snapshot the answer was computed against — the fencing witness.
+    """
+
+    def __init__(self, s: int, t: int, kind: str = "reach",
+                 bound: Optional[int] = None, regex: Optional[str] = None,
+                 automaton: Optional[QueryAutomaton] = None,
+                 lane: str = GREEN, cost: float = 0.0,
+                 deadline: Optional[float] = None):
+        super().__init__()
+        self.s = s
+        self.t = t
+        self.kind = kind
+        self.bound = bound
+        self.regex = regex
+        self.automaton = automaton
+        self.lane = lane
+        self.cost = cost
+        self.deadline = deadline            # absolute engine-clock seconds
+        self.cache_version: Optional[int] = None
+        self.attempts = 0                   # engine attempts it rode in
+        self.degraded = False               # served by the vmap fallback
+        self._enqueued_wall: Optional[float] = None   # batch_wait pacing
+
+    def to_query(self) -> Query:
+        if self.kind == "reach":
+            return Reach(self.s, self.t)
+        if self.kind == "dist":
+            return Dist(self.s, self.t)
+        if self.kind == "bounded":
+            return Dist(self.s, self.t, bound=self.bound)
+        return Rpq(self.s, self.t, regex=self.regex,
+                   automaton=self.automaton)
+
+    def __repr__(self) -> str:
+        return (f"QueryFuture({self.kind} {self.s}->{self.t}, "
+                f"status={self.status}, lane={self.lane})")
+
+
+class UpdateFuture(_Future):
+    """Awaitable handle for one submitted graph delta.
+
+    Returned by :meth:`repro.serve.QueryServer.submit_delta`.
+    ``result()`` blocks for the :class:`~repro.core.incremental
+    .UpdateStats` (or raises :class:`~repro.errors.DeltaApplyFailed` if
+    the delta rolled back); terminal ``status`` is ``APPLIED`` or
+    ``FAILED``.
+    """
+
+    def __init__(self, delta: GraphDelta):
+        super().__init__()
+        self.delta = delta
+
+    def __repr__(self) -> str:
+        return f"UpdateFuture(status={self.status})"
+
+
+class _Segment:
+    """Queries between two snapshot barriers, bucketed by admission
+    lane."""
+
+    __slots__ = ("lanes",)
+
+    def __init__(self):
+        self.lanes: Dict[str, collections.deque] = {
+            GREEN: collections.deque(), YELLOW: collections.deque()}
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self.lanes.values())
+
+
+class AsyncQueryEngine:
+    """Continuous-batching scheduler over one shared
+    :class:`~repro.core.session.QuerySession` (see module docstring)."""
+
+    #: how long the scheduler's graceful join waits before giving up
+    JOIN_TIMEOUT_S = 60.0
+
+    def __init__(self, session: QuerySession, batch_size: int = 64,
+                 retry: Optional[RetryPolicy] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
+                 ship_margin_s: float = 0.025,
+                 batch_wait_s: float = 0.002,
+                 telemetry: Optional[Telemetry] = None):
+        assert batch_size > 0
+        self.session = session
+        self.batch_size = batch_size
+        self.retry = retry or RetryPolicy()
+        self._clock = clock
+        self._sleep = sleep
+        self.ship_margin = ship_margin_s
+        self.batch_wait = batch_wait_s
+        self.telemetry = telemetry or Telemetry()
+        # _mutex guards the queue/counters; it is reentrant because batch
+        # formation (under the condition) resolves expired futures inline
+        self._mutex = threading.RLock()
+        self._work = threading.Condition(self._mutex)
+        self._queue: collections.deque = collections.deque()  # _Segment|UpdateFuture
+        self._in_flight: List[_Future] = []   # popped, not yet resolved
+        self._flushes = 0                     # active flush() calls
+        self._resolved_seq = 0
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        # one executor at a time: either the scheduler thread or an
+        # inline flush, never both
+        self._serve_mutex = threading.Lock()
+        self.dead_letters: List[QueryFuture] = []
+        self.batches_run = 0
+        self.updates_applied = 0
+        self.updates_failed = 0
+        self.retries = 0          # extra engine attempts beyond the first
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, fut: QueryFuture) -> QueryFuture:
+        """Enqueue an admitted query future (intake validation is the
+        server's job)."""
+        with self._work:
+            if self._stop:
+                raise RuntimeError("engine is stopped; no new submissions")
+            if not self._queue or not isinstance(self._queue[-1], _Segment):
+                self._queue.append(_Segment())
+            lane = fut.lane if fut.lane in (GREEN, YELLOW) else GREEN
+            fut.submitted_at = self._clock()
+            fut._enqueued_wall = time.monotonic()
+            self._queue[-1].lanes[lane].append(fut)
+            self._work.notify_all()
+        return fut
+
+    def submit_update(self, fut: UpdateFuture) -> UpdateFuture:
+        """Enqueue a graph delta as a snapshot barrier."""
+        with self._work:
+            if self._stop:
+                raise RuntimeError("engine is stopped; no new submissions")
+            fut.submitted_at = self._clock()
+            self._queue.append(fut)
+            self._work.notify_all()
+        return fut
+
+    def backlog(self) -> int:
+        """Submitted-but-unresolved count (queued + executing)."""
+        with self._mutex:
+            queued = sum(e.depth() if isinstance(e, _Segment) else 1
+                         for e in self._queue)
+            return queued + len(self._in_flight)
+
+    def depths(self) -> Dict[str, int]:
+        """Live per-lane queue depths plus pending update count."""
+        with self._mutex:
+            out = {GREEN: 0, YELLOW: 0, "updates": 0}
+            for e in self._queue:
+                if isinstance(e, _Segment):
+                    for lane, q in e.lanes.items():
+                        out[lane] += len(q)
+                else:
+                    out["updates"] += 1
+            return out
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def start(self) -> "AsyncQueryEngine":
+        """Spawn the background scheduler thread (idempotent)."""
+        with self._mutex:
+            if self.running:
+                return self
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._loop, name="repro-query-scheduler", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler.  ``drain=True`` (default) serves everything
+        already queued first; ``drain=False`` abandons pending futures
+        (they stay unresolved forever)."""
+        if drain:
+            self.flush()
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+        t = self._thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=self.JOIN_TIMEOUT_S)
+        self._thread = None
+
+    # -- synchronous barrier ----------------------------------------------
+
+    def flush(self) -> List[_Future]:
+        """Serve everything submitted before this call and return those
+        futures in resolution order.
+
+        With a running scheduler this just waits (the flush flag makes
+        the scheduler ship partial buckets eagerly); without one it runs
+        the same scheduling loop inline — the deterministic path the
+        compatibility ``drain()`` uses.
+        """
+        with self._mutex:
+            targets = self._unresolved()
+            self._flushes += 1
+            self._work.notify_all()
+        try:
+            if self.running:
+                for f in targets:
+                    f._event.wait()
+            else:
+                self._run_inline(targets)
+        finally:
+            with self._mutex:
+                self._flushes -= 1
+        return sorted(targets, key=lambda f: f._seq)
+
+    def _unresolved(self) -> List[_Future]:
+        """Every queued or in-flight future (caller holds the mutex)."""
+        out: List[_Future] = []
+        for e in self._queue:
+            if isinstance(e, _Segment):
+                for q in e.lanes.values():
+                    out.extend(q)
+            else:
+                out.append(e)
+        out.extend(f for f in self._in_flight if not f.done())
         return out
 
-    def _serve_batch(self, reqs: List[Request]) -> List[Request]:
-        B = self.batch
-        S = max(len(r.prompt) for r in reqs)
-        prompts = np.zeros((B, S), np.int32)
-        for j, r in enumerate(reqs):
-            prompts[j, S - len(r.prompt):] = r.prompt      # left-pad
-        cache = T.init_cache(self.cfg, B, self.max_len)
-        # prefill by stepping (keeps one compiled step; fine at toy scale)
-        logits = None
-        for i in range(S):
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(prompts[:, i]),
-                                         jnp.full((B,), i, jnp.int32))
-        tok = jnp.argmax(logits, axis=-1)
-        n_new = max(r.max_new_tokens for r in reqs)
-        gen = [tok]
-        for i in range(n_new - 1):
-            logits, cache = self._decode(self.params, cache, tok,
-                                         jnp.full((B,), S + i, jnp.int32))
-            tok = jnp.argmax(logits, axis=-1)
-            gen.append(tok)
-        gen_np = np.stack([np.asarray(g) for g in gen], axis=1)  # [B, n_new]
-        for j, r in enumerate(reqs):
-            r.generated = gen_np[j, : r.max_new_tokens].tolist()
-        return reqs
+    def _run_inline(self, targets: List[_Future]) -> None:
+        """Flush without a scheduler thread: run the scheduling loop on
+        the calling thread until every target is resolved."""
+        with self._serve_mutex:
+            while not all(f.done() for f in targets):
+                work = self._next_work_nowait()
+                if work is None:
+                    if all(f.done() for f in targets):
+                        break
+                    raise RuntimeError(
+                        "flush stalled: unresolved futures but no "
+                        "runnable work (lost request?)")
+                self._execute(work)
+
+    # -- scheduler loop ----------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            work = self._next_work()
+            if work is None:
+                return
+            with self._serve_mutex:
+                self._execute(work)
+
+    def _execute(self, work) -> None:
+        if isinstance(work, UpdateFuture):
+            self._apply_update(work)
+        else:
+            self._serve_chunk(work)
+
+    def _next_work(self):
+        """Block until a chunk or barrier is ready to execute; None on
+        stop."""
+        with self._work:
+            while True:
+                if self._stop:
+                    return None
+                work = self._pop_ready()
+                if work is not None:
+                    return work
+                head = self._head_segment()
+                if head is None or head.depth() == 0:
+                    self._work.wait()          # notified on submit/stop
+                else:
+                    self._work.wait(self._poll_s(head))
+
+    def _next_work_nowait(self):
+        """Non-blocking variant for inline flush (flush flag is set, so
+        any non-empty lane forms a chunk)."""
+        with self._mutex:
+            return self._pop_ready()
+
+    def _head_segment(self) -> Optional[_Segment]:
+        """Drop exhausted leading segments; return the head segment (or
+        None when the queue is empty / headed by an update).  Caller
+        holds the mutex."""
+        while (len(self._queue) > 1
+               and isinstance(self._queue[0], _Segment)
+               and self._queue[0].depth() == 0):
+            self._queue.popleft()
+        if not self._queue:
+            return None
+        head = self._queue[0]
+        return head if isinstance(head, _Segment) else None
+
+    def _pop_ready(self):
+        """Pop the next executable unit (update barrier or query chunk)
+        if one is ready.  Caller holds the mutex."""
+        self._head_segment()
+        if not self._queue:
+            return None
+        head = self._queue[0]
+        if isinstance(head, UpdateFuture):
+            self._queue.popleft()
+            self._in_flight.append(head)
+            return head
+        if head.depth() == 0:
+            return None
+        return self._form_chunk(head)
+
+    def _form_chunk(self, seg: _Segment) -> Optional[List[QueryFuture]]:
+        """Expire dead requests, then pop a chunk from the preferred lane
+        when a ship condition holds.  Caller holds the mutex."""
+        now = self._clock()
+        for lane, q in seg.lanes.items():
+            live: collections.deque = collections.deque()
+            while q:
+                r = q.popleft()
+                if r.deadline is not None and now >= r.deadline:
+                    r.error = DeadlineExceeded(
+                        f"deadline expired "
+                        f"{(now - r.deadline) * 1e3:.1f}ms before the "
+                        f"{r.kind} query ({r.s}, {r.t}) was served")
+                    self._resolve(r, Status.DEADLINE)
+                else:
+                    live.append(r)
+            seg.lanes[lane] = live
+        lane = GREEN if seg.lanes[GREEN] else YELLOW   # green ships first
+        reqs = seg.lanes[lane]
+        if not reqs:
+            return None
+        ship = (len(reqs) >= self.batch_size
+                or len(self._queue) > 1      # barrier fenced behind us
+                or self._flushes > 0
+                or self._stop
+                or self._deadline_pressed(reqs, now)
+                or (time.monotonic() - reqs[0]._enqueued_wall
+                    >= self.batch_wait))
+        if not ship:
+            return None
+        chunk = [reqs.popleft()
+                 for _ in range(min(self.batch_size, len(reqs)))]
+        for r in chunk:
+            r.status = Status.RUNNING
+        self._in_flight.extend(chunk)
+        return chunk
+
+    def _deadline_pressed(self, reqs, now: float) -> bool:
+        """True when the oldest latency budget in the lane is nearly spent
+        — ship the partially-full bucket now rather than risk blowing it
+        while waiting for the bucket to fill."""
+        deadlines = [r.deadline for r in reqs if r.deadline is not None]
+        if not deadlines:
+            return False
+        return min(deadlines) - now <= self.ship_margin
+
+    def _poll_s(self, seg: _Segment) -> float:
+        """Bounded wait until the head segment's next ship condition can
+        trigger on its own (batch_wait expiry or deadline pressure)."""
+        wait = self.batch_wait
+        oldest = None
+        for q in seg.lanes.values():
+            for r in q:
+                if oldest is None or r._enqueued_wall < oldest:
+                    oldest = r._enqueued_wall
+                if r.deadline is not None:
+                    press = r.deadline - self.ship_margin - self._clock()
+                    wait = min(wait, press)
+        if oldest is not None:
+            wait = min(wait,
+                       self.batch_wait - (time.monotonic() - oldest))
+        return max(1e-4, min(wait, 0.05))
+
+    # -- execution (PR-7 robustness stack, unchanged semantics) ------------
+
+    def _serve_chunk(self, reqs: List[QueryFuture]) -> None:
+        """Fail requests that expired while queued behind a slow batch,
+        then serve the rest with retries."""
+        now = self._clock()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now >= r.deadline:
+                r.error = DeadlineExceeded(
+                    f"deadline expired {(now - r.deadline) * 1e3:.1f}ms "
+                    f"before the {r.kind} query ({r.s}, {r.t}) was served")
+                self._resolve(r, Status.DEADLINE)
+            else:
+                live.append(r)
+        self._serve_with_retry(live)
+
+    def _serve_with_retry(self, reqs: List[QueryFuture]) -> None:
+        """One chunk through the engine with capped-backoff retries; a
+        chunk that exhausts its retries is bisected so the poison request
+        is dead-lettered alone and its batchmates get served."""
+        if not reqs:
+            return
+        last: Optional[BaseException] = None
+        for attempt in range(1, self.retry.max_attempts + 1):
+            if attempt > 1:
+                self.retries += 1
+                self._sleep(self.retry.delay_s(attempt - 1))
+            for r in reqs:
+                r.attempts += 1
+            try:
+                self._serve_batch(reqs)
+            except Exception as exc:           # noqa: BLE001 — retried
+                last = exc
+                if getattr(exc, "permanent", False):
+                    break                      # retrying cannot help
+                continue
+            for r in reqs:
+                self._resolve(r, Status.DONE)
+            return
+        if len(reqs) == 1:
+            r = reqs[0]
+            r.error = DeadLetterError(r.attempts, last)
+            self.dead_letters.append(r)
+            self._resolve(r, Status.DEAD_LETTER)
+            return
+        mid = len(reqs) // 2                   # bisect: quarantine poison
+        self._serve_with_retry(reqs[:mid])
+        self._serve_with_retry(reqs[mid:])
+
+    def _serve_batch(self, reqs: List[QueryFuture]) -> None:
+        """ONE session.run mixed batch; the planner fuses it into one
+        compiled execution per (kind, automaton) group."""
+        results = self.session.run([r.to_query() for r in reqs])
+        for r, res in zip(reqs, results):
+            r.value = res.distance if r.kind == "dist" else res.answer
+            r.cache_version = res.cache_version
+            r.degraded = res.degraded
+        self.batches_run += 1
+        self.telemetry.record_batch(len(reqs), self.batch_size)
+
+    def _apply_update(self, fut: UpdateFuture) -> None:
+        """Apply one barrier delta.  On failure the session has already
+        rolled back to the pre-delta snapshot; the failure resolves the
+        future and serving continues — a poison delta never blocks the
+        requests queued behind it."""
+        try:
+            fut.value = self.session.apply(fut.delta)
+        except DeltaApplyFailed as exc:
+            fut.error = exc
+            self.updates_failed += 1
+            self._resolve(fut, Status.FAILED)
+            return
+        self.updates_applied += 1
+        self._resolve(fut, Status.APPLIED)
+
+    def _resolve(self, fut: _Future, status: Status) -> None:
+        """Move a future to its terminal status — exactly once, ever."""
+        assert fut.status in (Status.PENDING, Status.RUNNING), \
+            f"future resolved twice ({fut.status} -> {status}): {fut!r}"
+        fut.status = status
+        fut.resolved_at = self._clock()
+        with self._mutex:
+            self._resolved_seq += 1
+            fut._seq = self._resolved_seq
+            try:
+                self._in_flight.remove(fut)
+            except ValueError:
+                pass                           # expired before dispatch
+        route = (f"{fut.kind}/{fut.lane}" if isinstance(fut, QueryFuture)
+                 else "update")
+        self.telemetry.record(route, fut.latency_s, status)
+        fut._event.set()

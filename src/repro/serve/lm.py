@@ -1,0 +1,67 @@
+"""Batched serving loop: prefill + greedy decode with a KV cache.
+
+The decode step is the unit the decode_* / long_* dry-run cells lower; this
+module adds the request-level machinery around it (continuous batching of
+a request queue into fixed-size decode batches, per-request stop lengths).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray             # [S] int32
+    max_new_tokens: int = 16
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    """Fixed-batch continuous decoder (slots model, vLLM-style scheduling
+    at toy scale)."""
+
+    def __init__(self, cfg: T.LMConfig, params, batch: int, max_len: int):
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch, max_len
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos))
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve a queue of requests in fixed-size batches."""
+        out: List[Request] = []
+        for i in range(0, len(requests), self.batch):
+            out.extend(self._serve_batch(requests[i:i + self.batch]))
+        return out
+
+    def _serve_batch(self, reqs: List[Request]) -> List[Request]:
+        B = self.batch
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.zeros((B, S), np.int32)
+        for j, r in enumerate(reqs):
+            prompts[j, S - len(r.prompt):] = r.prompt      # left-pad
+        cache = T.init_cache(self.cfg, B, self.max_len)
+        # prefill by stepping (keeps one compiled step; fine at toy scale)
+        logits = None
+        for i in range(S):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(prompts[:, i]),
+                                         jnp.full((B,), i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)
+        n_new = max(r.max_new_tokens for r in reqs)
+        gen = [tok]
+        for i in range(n_new - 1):
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.full((B,), S + i, jnp.int32))
+            tok = jnp.argmax(logits, axis=-1)
+            gen.append(tok)
+        gen_np = np.stack([np.asarray(g) for g in gen], axis=1)  # [B, n_new]
+        for j, r in enumerate(reqs):
+            r.generated = gen_np[j, : r.max_new_tokens].tolist()
+        return reqs

@@ -1,126 +1,72 @@
-"""Fault-tolerant batched query serving over a QuerySession
-(DESIGN.md Secs. 3.4, 5 & 7).
+"""Futures-based query server over a QuerySession (DESIGN.md Secs. 3.4,
+5, 7 & 8).
 
-Requests accumulate in a queue and are drained in bounded-size chunks,
-each served by ONE ``session.run`` mixed batch — the session's planner
-fuses every chunk into one compiled execution per (kind, automaton)
-group, with batch sizes padded to buckets so the engine never retraces
-under bursty traffic.  All three query classes are served, including
-regular path queries (``kind="rpq"`` with a regex or automaton).
+:class:`QueryServer` is the intake layer of the continuous-batching
+stack: it validates and admits requests (PR-7 admission lanes, RED
+rejection) and hands them to the :class:`~repro.serve.engine
+.AsyncQueryEngine`, which forms fused (kind, automaton) batches from
+whatever is pending and executes each as ONE ``session.run`` on the
+shared session.  ``submit`` returns a :class:`~repro.serve.engine
+.QueryFuture` immediately; ``submit_delta`` an :class:`~repro.serve
+.engine.UpdateFuture` that fences the queue as a snapshot barrier.
 
-Robustness (Sec. 7), layered on that loop:
+Two serving modes:
 
-* **Admission control** — ``submit`` estimates each query's cost from
-  fragmentation stats (:mod:`repro.serve.admission`) and routes it to the
-  GREEN (cheap) or YELLOW (expensive) lane; RED queries are rejected at
-  intake with a typed :class:`~repro.errors.QueryTooExpensive`.  The
-  drain flushes the green lane first, so cheap queries never queue
-  behind heavy ones.
-* **Deadlines** — ``submit(..., deadline_ms=)`` gives a request a latency
-  budget.  The drain ships a *partially-full* bucket when the oldest
-  budget in a lane is nearly spent, and fails already-expired requests
-  fast with :class:`~repro.errors.DeadlineExceeded` instead of serving
-  them arbitrarily late.
-* **Retry / bisect / dead-letter** — a failed chunk retries with capped
-  exponential backoff; permanent faults skip the backoff.  A chunk that
-  keeps failing is bisected so the poison request is quarantined into
-  ``dead_letters`` (status ``"dead_letter"``) while its batchmates are
-  served — a poison request can never block the queue.
-* **Update isolation** — ``submit_delta`` keeps snapshot consistency
-  (queries before an update answer pre-delta; a batch never spans an
-  update).  A failing delta is rolled back by the session
-  (:class:`~repro.errors.DeltaApplyFailed`; pre-delta cache intact),
-  recorded on its request (status ``"failed"``), and the drain continues.
+* **continuous** (``start=True``, default): a background scheduler
+  thread serves as load arrives; callers block on
+  ``future.result(timeout=)`` only for their own answers, so concurrent
+  submitters overlap instead of serializing.
+* **deferred** (``start=False``): nothing runs until :meth:`flush`,
+  which executes the same scheduling loop inline — fully deterministic,
+  what the chaos/deadline tests and the legacy ``drain()`` path use.
 
-Every request reaches **exactly one** terminal status per submission:
-``done`` / ``dead_letter`` / ``deadline`` for queries, ``applied`` /
-``failed`` for updates — never lost, never double-served (asserted).
+The PR-7 robustness stack carries over unchanged (admission lanes,
+deadlines with partial-bucket shipping, retry/bisect/dead-letter, delta
+rollback, degraded fallback); see :mod:`repro.serve.engine` for the
+scheduling model and :mod:`repro.serve.telemetry` for the live
+p50/p95/p99 / qps / occupancy / lane-depth feed behind
+:meth:`QueryServer.telemetry`.
+
+``drain()`` — the PR-7 synchronous API — survives as a deprecated
+compatibility wrapper around :meth:`flush`.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+import warnings
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from ..core.automaton import QueryAutomaton
 from ..core.fragments import Fragmentation, GraphDelta
-from ..core.incremental import UpdateStats
-from ..core.plan import Dist, Query, Reach, Rpq
+from ..core.plan import Rpq
 from ..core.session import QuerySession, connect
-from ..errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
-                      QueryTooExpensive)
-from .admission import GREEN, YELLOW, AdmissionPolicy, estimate_cost
+from ..errors import QueryTooExpensive, Status
+from .admission import AdmissionPolicy, estimate_cost
+from .engine import (AsyncQueryEngine, QueryFuture, RetryPolicy,
+                     UpdateFuture)
 from .faults import FaultInjector
+from .telemetry import Telemetry
 
 VALID_KINDS = ("reach", "dist", "bounded", "rpq")
 
-# request lifecycle: PENDING -> exactly one terminal status
-PENDING = "pending"
-DONE = "done"                 # query answered (result filled)
-DEAD_LETTER = "dead_letter"   # query quarantined after retries + bisection
-DEADLINE = "deadline"         # query failed fast: budget expired unserved
-APPLIED = "applied"           # update applied (result = UpdateStats)
-FAILED = "failed"             # update failed and was rolled back
+# PR-7 string statuses — now values of the one Status enum (Status is a
+# str subclass, so e.g. DONE == Status.DONE == "done" all hold)
+PENDING = Status.PENDING
+DONE = Status.DONE
+DEAD_LETTER = Status.DEAD_LETTER
+DEADLINE = Status.DEADLINE
+APPLIED = Status.APPLIED
+FAILED = Status.FAILED
 
-
-@dataclasses.dataclass
-class RetryPolicy:
-    """Capped exponential backoff for transient serving failures: attempt
-    ``i`` (2nd, 3rd, ...) sleeps ``min(base * 2^(i-2), max)`` ms first.
-    Permanent faults (``exc.permanent``) skip retries entirely."""
-
-    max_attempts: int = 3
-    base_delay_ms: float = 5.0
-    max_delay_ms: float = 200.0
-
-    def delay_s(self, retry_index: int) -> float:
-        """Sleep before the ``retry_index``-th retry (1-based), seconds."""
-        ms = min(self.base_delay_ms * (2.0 ** (retry_index - 1)),
-                 self.max_delay_ms)
-        return ms / 1e3
-
-
-@dataclasses.dataclass
-class QueryRequest:
-    s: int
-    t: int
-    kind: str = "reach"              # one of VALID_KINDS
-    bound: Optional[int] = None      # bounded queries only
-    regex: Optional[str] = None      # rpq only (exactly one of regex /
-    automaton: Optional[QueryAutomaton] = None     # automaton)
-    result: object = None            # bool / int-or-None once served
-    # rvset-cache version the answer was computed against (snapshot id)
-    cache_version: Optional[int] = None
-    # -- robustness metadata (DESIGN.md Sec. 7) -----------------------------
-    lane: str = GREEN                # admission lane (green / yellow)
-    cost: float = 0.0                # admission cost estimate, semiring ops
-    deadline: Optional[float] = None  # absolute clock() time, seconds
-    status: str = PENDING            # lifecycle (see module constants)
-    error: Optional[BaseException] = None   # terminal failure, if any
-    attempts: int = 0                # engine attempts this request rode in
-    degraded: bool = False           # served by the vmap fallback
-
-    def to_query(self) -> Query:
-        if self.kind == "reach":
-            return Reach(self.s, self.t)
-        if self.kind == "dist":
-            return Dist(self.s, self.t)
-        if self.kind == "bounded":
-            return Dist(self.s, self.t, bound=self.bound)
-        return Rpq(self.s, self.t, regex=self.regex,
-                   automaton=self.automaton)
-
-
-@dataclasses.dataclass
-class UpdateRequest:
-    delta: GraphDelta
-    result: Optional[UpdateStats] = None   # filled once applied
-    status: str = PENDING                  # applied / failed
-    error: Optional[BaseException] = None  # DeltaApplyFailed when failed
+# PR-7 names for the request records; submissions now return futures
+# with the same attribute surface (s/t/kind/lane/status/error/attempts/
+# cache_version, and `.value` where the old mutable `.result` field was)
+QueryRequest = QueryFuture
+UpdateRequest = UpdateFuture
 
 
 class QueryServer:
-    """Bounded-batch fault-tolerant server over one (dynamic)
+    """Continuous-batching fault-tolerant server over one (dynamic)
     Fragmentation."""
 
     def __init__(self, fr: Fragmentation, batch_size: int = 64,
@@ -132,11 +78,15 @@ class QueryServer:
                  chaos: Optional[FaultInjector] = None,
                  clock: Callable[[], float] = time.monotonic,
                  sleep: Callable[[float], None] = time.sleep,
-                 ship_margin_ms: float = 25.0):
+                 ship_margin_ms: float = 25.0,
+                 batch_wait_ms: float = 2.0,
+                 start: bool = True,
+                 telemetry_window: int = 2048):
         """``with_dist=True`` eagerly builds the tropical cache too; the
         default leaves it to build lazily on the first dist/bounded query,
         so reach-only servers never pay for it.  Pass an existing
-        ``session`` to share its caches/backend, or a ``backend`` name to
+        ``session`` to share its caches/backend with other servers (the
+        session serializes group execution), or a ``backend`` name to
         open a fresh one (see :func:`repro.connect`).
 
         ``admission`` defaults to :meth:`AdmissionPolicy.for_fragmentation`
@@ -145,43 +95,48 @@ class QueryServer:
         :class:`~repro.serve.faults.FaultInjector` through the session.
         ``clock``/``sleep`` are injectable for deterministic deadline and
         backoff tests; ``ship_margin_ms`` is how close to the oldest
-        deadline the drain ships a partially-full bucket."""
+        deadline the scheduler ships a partially-full bucket, and
+        ``batch_wait_ms`` how long it lets a partial bucket wait for
+        batchmates before shipping anyway (the latency/occupancy knob).
+
+        ``start=False`` skips the scheduler thread: requests defer until
+        :meth:`flush` (deterministic mode)."""
         assert batch_size > 0
         self.fr = fr
-        self.batch_size = batch_size
         self.with_dist = with_dist
         self.session = session or connect(fr, backend=backend, chaos=chaos)
         if session is not None and chaos is not None:
             session.chaos = chaos
         self.admission = admission or AdmissionPolicy.for_fragmentation(fr)
-        self.retry = retry or RetryPolicy()
         self._clock = clock
-        self._sleep = sleep
-        self.ship_margin = ship_margin_ms / 1e3
-        self._queue: List[Union[QueryRequest, UpdateRequest]] = []
-        self.dead_letters: List[QueryRequest] = []
-        self.batches_run = 0
-        self.updates_applied = 0
-        self.updates_failed = 0
-        self.retries = 0          # extra engine attempts beyond the first
         self.rejected = 0         # RED-lane submissions refused
+        self.engine = AsyncQueryEngine(
+            self.session, batch_size=batch_size,
+            retry=retry or RetryPolicy(), clock=clock, sleep=sleep,
+            ship_margin_s=ship_margin_ms / 1e3,
+            batch_wait_s=batch_wait_ms / 1e3,
+            telemetry=Telemetry(window=telemetry_window))
         if warm:
             self.session.warm(with_dist=with_dist)
+        if start:
+            self.engine.start()
 
     # -- request intake ----------------------------------------------------
 
     def submit(self, s: int, t: int, kind: str = "reach",
                bound: Optional[int] = None, regex: Optional[str] = None,
                automaton: Optional[QueryAutomaton] = None,
-               deadline_ms: Optional[float] = None) -> QueryRequest:
-        """Validate, admit, and enqueue one query.
+               deadline_ms: Optional[float] = None) -> QueryFuture:
+        """Validate, admit, and enqueue one query; returns its
+        :class:`~repro.serve.engine.QueryFuture` immediately.
 
         Raises ``ValueError`` on malformed arguments (unknown kind, bad
         kind/arg combination, endpoint outside ``[0, n)``) and
         :class:`~repro.errors.QueryTooExpensive` when admission control
         rejects the query; neither leaves anything queued.
         ``deadline_ms`` gives the request a latency budget measured from
-        now (see :meth:`drain`)."""
+        now; an expired request resolves ``DEADLINE`` instead of being
+        served arbitrarily late."""
         if kind not in VALID_KINDS:
             raise ValueError(f"unknown query kind {kind!r}; expected one "
                              f"of {VALID_KINDS}")
@@ -206,10 +161,9 @@ class QueryServer:
         lane, cost = self._admit(kind, s, t, regex, automaton)
         deadline = (None if deadline_ms is None
                     else self._clock() + deadline_ms / 1e3)
-        req = QueryRequest(s, t, kind, bound, regex, automaton,
-                           lane=lane, cost=cost, deadline=deadline)
-        self._queue.append(req)
-        return req
+        fut = QueryFuture(s, t, kind, bound, regex, automaton,
+                          lane=lane, cost=cost, deadline=deadline)
+        return self.engine.submit(fut)
 
     def _admit(self, kind: str, s: int, t: int, regex, automaton):
         """Admission decision: (lane, cost estimate).  Raises
@@ -231,154 +185,95 @@ class QueryServer:
             raise
         return lane, cost
 
-    def submit_delta(self, delta: GraphDelta) -> UpdateRequest:
-        """Enqueue a graph update.  It is applied during ``drain`` in
-        submission order: earlier queries see the pre-delta snapshot,
-        later ones the repaired cache (or, if the delta fails and rolls
-        back, the unchanged pre-delta cache)."""
-        req = UpdateRequest(delta)
-        self._queue.append(req)
-        return req
+    def submit_delta(self, delta: GraphDelta) -> UpdateFuture:
+        """Enqueue a graph update; returns its :class:`~repro.serve
+        .engine.UpdateFuture` immediately.  The delta is a snapshot
+        barrier: queries submitted before it are served against the
+        pre-delta cache, queries after it wait for the repaired cache
+        (or, if the delta fails and rolls back, resume against the
+        unchanged pre-delta cache)."""
+        return self.engine.submit_update(UpdateFuture(delta))
 
     def pending(self) -> int:
-        return len(self._queue)
+        """Submitted-but-unresolved request count."""
+        return self.engine.backlog()
 
-    # -- serving loop ------------------------------------------------------
+    # -- serving -----------------------------------------------------------
 
-    def drain(self) -> List[Union[QueryRequest, UpdateRequest]]:
-        """Serve the whole queue; returns the requests in resolution order,
-        each with ``result``/``error`` filled and a terminal ``status``.
+    def flush(self) -> List[object]:
+        """Synchronous barrier: serve everything submitted before this
+        call; returns those futures in resolution order, each holding a
+        terminal ``status`` and a ``value``/``error``."""
+        return self.engine.flush()
 
-        Queries are bucketed per admission lane (green flushed first) in
-        bounded-size batches; a bucket also ships *early* when the oldest
-        deadline in its lane is within ``ship_margin`` of expiring.  An
-        update first flushes the queries queued before it (snapshot
-        consistency — reordering only ever happens between two updates),
-        then applies; failures never leave the queue blocked."""
-        queue, self._queue = self._queue, []   # new submits -> fresh queue
-        served: List[Union[QueryRequest, UpdateRequest]] = []
-        lanes = {GREEN: [], YELLOW: []}
+    def drain(self) -> List[object]:
+        """Deprecated PR-7 API: alias of :meth:`flush`.
 
-        def flush(lane: str) -> None:
-            reqs = lanes[lane]
-            while reqs:
-                chunk = reqs[: self.batch_size]
-                del reqs[: len(chunk)]
-                self._serve_chunk(chunk, served)
+        .. deprecated:: PR 8
+           Submissions return awaitable futures now — block on
+           ``future.result(timeout=)`` for individual answers, or call
+           :meth:`flush` where a full synchronous barrier is really
+           wanted.
+        """
+        warnings.warn(
+            "QueryServer.drain() is deprecated: submissions return "
+            "futures now; use future.result(timeout=) for per-request "
+            "answers or QueryServer.flush() for a synchronous barrier",
+            DeprecationWarning, stacklevel=2)
+        return self.flush()
 
-        def flush_all() -> None:
-            flush(GREEN)                       # low-latency lane first
-            flush(YELLOW)
+    def close(self, drain: bool = True) -> None:
+        """Stop the scheduler thread (serving the backlog first unless
+        ``drain=False``).  Idempotent; deferred-mode servers just flush."""
+        self.engine.stop(drain=drain)
 
-        for req in queue:
-            if isinstance(req, UpdateRequest):
-                flush_all()                    # pre-delta queries answered
-                self._apply_update(req, served)
-                continue
-            lane = req.lane if req.lane in lanes else GREEN
-            lanes[lane].append(req)
-            if (len(lanes[lane]) >= self.batch_size
-                    or self._deadline_pressed(lanes[lane])):
-                flush(lane)
-        flush_all()
-        return served
+    def __enter__(self) -> "QueryServer":
+        return self
 
-    def _deadline_pressed(self, reqs: List[QueryRequest]) -> bool:
-        """True when the oldest latency budget in the lane is nearly spent
-        — ship the partially-full bucket now rather than risk blowing it
-        while waiting for the bucket to fill."""
-        deadlines = [r.deadline for r in reqs if r.deadline is not None]
-        if not deadlines:
-            return False
-        return min(deadlines) - self._clock() <= self.ship_margin
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None)
 
-    def _serve_chunk(self, reqs: List[QueryRequest], served) -> None:
-        """Fail already-expired requests fast, then serve the rest with
-        retries."""
-        now = self._clock()
-        live = []
-        for r in reqs:
-            if r.deadline is not None and now >= r.deadline:
-                r.error = DeadlineExceeded(
-                    f"deadline expired {(now - r.deadline) * 1e3:.1f}ms "
-                    f"before the {r.kind} query ({r.s}, {r.t}) was served")
-                self._resolve(r, DEADLINE, served)
-            else:
-                live.append(r)
-        self._serve_with_retry(live, served)
+    # -- introspection -----------------------------------------------------
 
-    def _serve_with_retry(self, reqs: List[QueryRequest], served) -> None:
-        """One chunk through the engine with capped-backoff retries; a
-        chunk that exhausts its retries is bisected so the poison request
-        is dead-lettered alone and its batchmates get served."""
-        if not reqs:
-            return
-        last: Optional[BaseException] = None
-        for attempt in range(1, self.retry.max_attempts + 1):
-            if attempt > 1:
-                self.retries += 1
-                self._sleep(self.retry.delay_s(attempt - 1))
-            for r in reqs:
-                r.attempts += 1
-            try:
-                self._serve_batch(reqs)
-            except Exception as exc:           # noqa: BLE001 — retried
-                last = exc
-                if getattr(exc, "permanent", False):
-                    break                      # retrying cannot help
-                continue
-            for r in reqs:
-                self._resolve(r, DONE, served)
-            return
-        if len(reqs) == 1:
-            r = reqs[0]
-            r.error = DeadLetterError(r.attempts, last)
-            self.dead_letters.append(r)
-            self._resolve(r, DEAD_LETTER, served)
-            return
-        mid = len(reqs) // 2                   # bisect: quarantine poison
-        self._serve_with_retry(reqs[:mid], served)
-        self._serve_with_retry(reqs[mid:], served)
+    def telemetry(self) -> dict:
+        """Live serving dashboard: p50/p95/p99 latency per route
+        (kind/lane), queries/sec, batch occupancy, lane depths, status
+        counts (see :class:`~repro.serve.telemetry.Telemetry`)."""
+        return self.engine.telemetry.snapshot(
+            lane_depths=self.engine.depths())
 
-    def _apply_update(self, req: UpdateRequest, served) -> None:
-        """Apply one queued delta.  On failure the session has already
-        rolled back to the pre-delta snapshot; the failure is recorded on
-        the request and the drain continues — a poison delta never blocks
-        the requests queued behind it."""
-        try:
-            req.result = self.session.apply(req.delta)
-        except DeltaApplyFailed as exc:
-            req.error = exc
-            self.updates_failed += 1
-            self._resolve(req, FAILED, served)
-            return
-        self.updates_applied += 1
-        self._resolve(req, APPLIED, served)
+    @property
+    def batch_size(self) -> int:
+        return self.engine.batch_size
 
-    def _resolve(self, req, status: str, served) -> None:
-        """Move a request to its terminal status — exactly once, ever."""
-        assert req.status == PENDING, \
-            f"request resolved twice ({req.status} -> {status}): {req!r}"
-        req.status = status
-        served.append(req)
+    @property
+    def dead_letters(self) -> List[QueryFuture]:
+        return self.engine.dead_letters
 
-    def _serve_batch(self, reqs: List[QueryRequest]) -> None:
-        """ONE session.run mixed batch; the planner fuses it into one
-        compiled execution per (kind, automaton) group."""
-        results = self.session.run([r.to_query() for r in reqs])
-        for r, res in zip(reqs, results):
-            r.result = res.distance if r.kind == "dist" else res.answer
-            r.cache_version = res.cache_version
-            r.degraded = res.degraded
-        self.batches_run += 1
+    @property
+    def batches_run(self) -> int:
+        return self.engine.batches_run
+
+    @property
+    def retries(self) -> int:
+        return self.engine.retries
+
+    @property
+    def updates_applied(self) -> int:
+        return self.engine.updates_applied
+
+    @property
+    def updates_failed(self) -> int:
+        return self.engine.updates_failed
 
     # -- convenience -------------------------------------------------------
 
     def serve_pairs(self, pairs: Sequence[Tuple[int, int]],
                     kind: str = "reach", **kw) -> List[object]:
-        """Submit + drain in one call; returns the results for ``pairs``
-        only (any previously queued requests are served too, but their
-        results stay on their own request objects)."""
+        """Submit a batch of ``(s, t)`` pairs and block for their answers
+        (raising the typed error if one fails terminally).  In deferred
+        mode this flushes the whole queue first."""
         mine = [self.submit(s, t, kind=kind, **kw) for s, t in pairs]
-        self.drain()
-        return [r.result for r in mine]
+        if not self.engine.running:
+            self.engine.flush()
+        return [f.result() for f in mine]

@@ -1,9 +1,13 @@
-"""Amortized rvset cache + batched engine vs the seed path and oracles.
+"""Amortized rvset cache + batched session execution vs the seed path
+and oracles.
 
-The cached/batched evaluation (core.cache) must answer exactly like the
-seed single-query engine (core.api) and the networkx oracles on arbitrary
-graph x fragmentation x query — the cache is an optimization, never a
-semantic change.
+The cached/batched evaluation (a ``repro.connect`` session over
+core.cache) must answer exactly like the seed single-query engine
+(core.api) and the networkx oracles on arbitrary graph x fragmentation x
+query — the cache is an optimization, never a semantic change.  (The
+PR-4-deprecated ``dis_*_cached`` / ``dis_*_batch`` shims these tests
+used to drive were removed in PR 8; sessions are the one cached entry
+point.)
 """
 import zlib
 
@@ -11,10 +15,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (build_query_automaton, dis_dist, dis_dist_batch,
-                        dis_dist_cached, dis_reach, dis_reach_batch,
-                        dis_reach_cached, dis_rpq, dis_rpq_cached,
-                        fragment_graph, get_rvset_cache, prepare_rvset_cache)
+from repro import connect
+from repro.core import (Dist, Reach, build_query_automaton, dis_dist,
+                        dis_reach, dis_rpq, fragment_graph, get_rvset_cache,
+                        prepare_rvset_cache)
 from repro.graph import erdos_renyi, random_partition
 from repro.serve import QueryServer
 
@@ -44,10 +48,10 @@ def test_property_batched_reach_matches_seed_and_oracle(data):
     fr = fragment_graph(g, part, k)
     pairs = [(data.draw(st.integers(0, n - 1)), data.draw(st.integers(0, n - 1)))
              for _ in range(4)]
-    got = dis_reach_batch(fr, pairs)
-    for (s, t), ans in zip(pairs, got):
+    got = connect(fr).run([Reach(s, t) for s, t in pairs])
+    for (s, t), r in zip(pairs, got):
         want = oracle_reach(g, s, t)
-        assert bool(ans) == want
+        assert r.answer == want
         assert dis_reach(fr, s, t).answer == want
 
 
@@ -62,27 +66,26 @@ def test_property_batched_dist_matches_oracle(data):
     fr = fragment_graph(g, random_partition(g, k, seed), k)
     pairs = [(data.draw(st.integers(0, n - 1)), data.draw(st.integers(0, n - 1)))
              for _ in range(4)]
-    got = dis_dist_batch(fr, pairs)
-    for (s, t), d in zip(pairs, got):
-        want = oracle_dist(g, s, t)
-        assert (None if d < 0 else int(d)) == want
+    got = connect(fr).run([Dist(s, t) for s, t in pairs])
+    for (s, t), r in zip(pairs, got):
+        assert r.distance == oracle_dist(g, s, t)
 
 
 @pytest.mark.parametrize("seed", range(4))
-def test_cached_single_query_wrappers(seed):
+def test_cached_single_query_session(seed):
     rng = np.random.default_rng(seed)
     g, fr = _case(int(rng.integers(8, 36)), int(rng.integers(5, 110)),
                   int(rng.integers(1, 5)), seed)
+    sess = connect(fr)
     for _ in range(8):
         s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
-        assert dis_reach_cached(fr, s, t).answer == oracle_reach(g, s, t)
-        res = dis_dist_cached(fr, s, t)
-        assert res.distance == oracle_dist(g, s, t)
+        assert sess.reach(s, t) == oracle_reach(g, s, t)
+        assert sess.dist(s, t).distance == oracle_dist(g, s, t)
     # bounded semantics agree with the seed path (answer AND distance:
     # a failed bounded query reports no distance on both paths)
     for bound in (0, 1, 3):
         s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
-        got = dis_dist_cached(fr, s, t, bound=bound)
+        got = sess.dist(s, t, bound=bound)
         want = dis_dist(fr, s, t, bound=bound)
         assert got.answer == want.answer
         assert got.distance == want.distance
@@ -95,23 +98,25 @@ def test_cached_rpq_matches_seed_and_oracle(regex):
     rng = np.random.default_rng(zlib.crc32(regex.encode()))
     g, fr = _case(18, 50, 3, int(rng.integers(100)))
     qa = build_query_automaton(regex, lambda x: int(x))
+    sess = connect(fr)
     for _ in range(6):
         s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
         want = oracle_rpq(g, s, t, qa)
         assert dis_rpq(fr, s, t, qa).answer == want
-        assert dis_rpq_cached(fr, s, t, qa).answer == want
+        assert sess.rpq(s, t, automaton=qa) == want
 
 
 def test_rpq_closure_cached_per_automaton():
     g, fr = _case(16, 40, 2, 0)
+    sess = connect(fr)
     qa = build_query_automaton("0* 1", lambda x: int(x))
-    dis_rpq_cached(fr, 0, 5, qa)
+    sess.rpq(0, 5, automaton=qa)
     cache = get_rvset_cache(fr)
     assert len(cache.rpq_closures) == 1
-    dis_rpq_cached(fr, 1, 6, qa)           # same automaton: no new closure
+    sess.rpq(1, 6, automaton=qa)           # same automaton: no new closure
     assert len(cache.rpq_closures) == 1
     qb = build_query_automaton("1* 0", lambda x: int(x))
-    dis_rpq_cached(fr, 0, 5, qb)
+    sess.rpq(0, 5, automaton=qb)
     assert len(cache.rpq_closures) == 2
 
 
@@ -149,7 +154,7 @@ def test_cache_is_built_once_and_reused():
     assert c1 is c2 and fr.rvset_cache is c1
     # dist parts attach lazily to the same cache object
     assert c1.bl_dist is None
-    dis_dist_batch(fr, [(0, 1)])
+    connect(fr).run([Dist(0, 1)])
     assert c1.bl_dist is not None
 
 
@@ -167,18 +172,20 @@ def test_payload_bits_report_bitpacked_size():
 
 def test_empty_and_degenerate_batches():
     g, fr = _case(10, 20, 2, 1)
-    assert dis_reach_batch(fr, np.zeros((0, 2), np.int64)).shape == (0,)
-    assert bool(dis_reach_batch(fr, [(3, 3)])[0])         # s == t
+    sess = connect(fr)
+    assert sess.run([]) == []
+    assert sess.reach(3, 3)                               # s == t
     # single fragment: no boundary at all (nb == 0)
     g1 = erdos_renyi(12, 30, seed=2)
     fr1 = fragment_graph(g1, np.zeros(12, np.int32), 1)
+    sess1 = connect(fr1)
     pairs = [(0, 5), (5, 0), (2, 2)]
-    got = dis_reach_batch(fr1, pairs)
-    for (s, t), a in zip(pairs, got):
-        assert bool(a) == oracle_reach(g1, s, t)
-    d = dis_dist_batch(fr1, pairs)
-    for (s, t), dd in zip(pairs, d):
-        assert (None if dd < 0 else int(dd)) == oracle_dist(g1, s, t)
+    got = sess1.run([Reach(s, t) for s, t in pairs])
+    for (s, t), r in zip(pairs, got):
+        assert r.answer == oracle_reach(g1, s, t)
+    d = sess1.run([Dist(s, t) for s, t in pairs])
+    for (s, t), r in zip(pairs, d):
+        assert r.distance == oracle_dist(g1, s, t)
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +194,7 @@ def test_empty_and_degenerate_batches():
 
 def test_query_server_matches_oracle_across_batches():
     g, fr = _case(36, 110, 4, 11)
-    srv = QueryServer(fr, batch_size=8)
+    srv = QueryServer(fr, batch_size=8, start=False)
     rng = np.random.default_rng(0)
     pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n)))
              for _ in range(19)]                       # odd: forces padding
@@ -198,10 +205,10 @@ def test_query_server_matches_oracle_across_batches():
     for s, t in pairs[:5]:
         srv.submit(s, t, kind="dist")
     srv.submit(pairs[0][0], pairs[0][1], kind="bounded", bound=2)
-    out = srv.drain()
+    out = srv.flush()
     for r in out:
         want = oracle_dist(g, r.s, r.t)
         if r.kind == "dist":
-            assert r.result == want
+            assert r.value == want
         else:
-            assert r.result == (want is not None and want <= 2)
+            assert r.value == (want is not None and want <= 2)

@@ -44,6 +44,9 @@ def _case(n=30, m=70, k=2, seed=1):
 def _server(fr, backend="vmap", chaos=None, **kw):
     kw.setdefault("batch_size", 8)
     kw.setdefault("retry", RetryPolicy(max_attempts=3, base_delay_ms=0.0))
+    # deferred mode: serving happens inside flush(), deterministically
+    # (the continuous scheduler thread is covered by test_async_serve)
+    kw.setdefault("start", False)
     return QueryServer(fr, backend=backend, chaos=chaos, **kw)
 
 
@@ -133,7 +136,7 @@ def test_poison_request_quarantined_not_blocking():
     srv = _server(fr, chaos=chaos)
     poison = srv.submit(0, 1)
     mates = [srv.submit(2 + i, 10 + i) for i in range(5)]
-    srv.drain()
+    srv.flush()
     assert poison.status == "dead_letter"
     assert isinstance(poison.error, DeadLetterError)
     assert isinstance(poison.error.cause, InjectedFault)
@@ -141,12 +144,12 @@ def test_poison_request_quarantined_not_blocking():
     assert srv.dead_letters == [poison]
     for r in mates:
         assert r.status == "done"
-        assert r.result == oracle_reach(g, r.s, r.t)
+        assert r.value == oracle_reach(g, r.s, r.t)
     # later submitters are not blocked either
     later = srv.submit(5, 6)
-    srv.drain()
+    srv.flush()
     assert later.status == "done"
-    assert later.result == oracle_reach(g, 5, 6)
+    assert later.value == oracle_reach(g, 5, 6)
     assert srv.pending() == 0
 
 
@@ -159,10 +162,10 @@ def test_transient_faults_retry_with_backoff_to_success():
                   retry=RetryPolicy(max_attempts=4, base_delay_ms=5.0,
                                     max_delay_ms=8.0))
     reqs = [srv.submit(i, i + 3) for i in range(4)]
-    srv.drain()
+    srv.flush()
     for r in reqs:
         assert r.status == "done"
-        assert r.result == oracle_reach(g, r.s, r.t)
+        assert r.value == oracle_reach(g, r.s, r.t)
         assert r.attempts == 3           # 2 injected failures + 1 success
     assert srv.retries == 2
     assert sleeps == [0.005, 0.008]      # exponential, capped at max_delay
@@ -179,7 +182,7 @@ def test_permanent_fault_skips_backoff():
                   retry=RetryPolicy(max_attempts=5, base_delay_ms=50.0))
     srv.submit(0, 1)
     mate = srv.submit(2, 3)
-    srv.drain()
+    srv.flush()
     assert sleeps == []
     assert mate.status == "done"
 
@@ -218,9 +221,9 @@ def test_admission_lanes_and_red_rejection():
     assert srv.rejected == 1
     assert srv.pending() == 2            # the rejected query never queued
 
-    srv.drain()
-    assert green.result == oracle_reach(g, 0, 5)
-    assert yellow.result == oracle_dist(g, 0, 5)
+    srv.flush()
+    assert green.value == oracle_reach(g, 0, 5)
+    assert yellow.value == oracle_dist(g, 0, 5)
 
 
 def test_admission_default_policy_never_rejects():
@@ -240,9 +243,9 @@ def test_rpq_admission_cost_drops_once_closure_cached():
     _, fr = _case()
     srv = _server(fr)
     cold = srv.submit(0, 5, kind="rpq", regex="(0|1)*")
-    srv.drain()
+    srv.flush()
     warm = srv.submit(0, 5, kind="rpq", regex="(0|1)*")
-    srv.drain()
+    srv.flush()
     assert warm.cost < cold.cost
 
 
@@ -257,27 +260,33 @@ def test_expired_deadline_fails_fast():
     stale = srv.submit(0, 5, deadline_ms=50.0)
     fresh = srv.submit(1, 6)
     now["t"] = 1.0                       # budget long gone before the drain
-    srv.drain()
+    srv.flush()
     assert stale.status == "deadline"
     assert isinstance(stale.error, DeadlineExceeded)
-    assert stale.result is None          # never served
+    assert stale.value is None          # never served
     assert fresh.status == "done"
-    assert fresh.result == oracle_reach(g, 1, 6)
+    assert fresh.value == oracle_reach(g, 1, 6)
 
 
 def test_near_deadline_ships_partial_bucket():
     """A request whose budget is inside the ship margin must not wait for
-    the bucket to fill: the drain ships a partially-full batch."""
-    _, fr = _case()
-    now = {"t": 0.0}
-    srv = _server(fr, batch_size=8, clock=lambda: now["t"],
-                  ship_margin_ms=25.0)
-    urgent = srv.submit(0, 5, deadline_ms=1.0)   # 1ms budget < 25ms margin
-    relaxed = [srv.submit(i, i + 2) for i in range(5)]
-    srv.drain()
-    assert urgent.status == "done"
-    assert all(r.status == "done" for r in relaxed)
-    assert srv.batches_run == 2          # [urgent] shipped alone, then rest
+    the bucket to fill or for batch_wait: the scheduler ships a
+    partially-full bucket immediately (continuous mode)."""
+    g, fr = _case()
+    # batch_wait is effectively infinite, so only deadline pressure can
+    # ship the 2-of-8 bucket before the timeout
+    srv = _server(fr, batch_size=8, start=True, batch_wait_ms=60_000.0,
+                  ship_margin_ms=1000.0)
+    try:
+        relaxed = srv.submit(1, 3)
+        urgent = srv.submit(0, 5, deadline_ms=500.0)  # inside ship margin
+        assert urgent.result(timeout=30.0) == oracle_reach(g, 0, 5)
+        assert urgent.status == "done"
+        # the partial bucket carried its lane-mate along (FIFO)
+        assert relaxed.result(timeout=30.0) == oracle_reach(g, 1, 3)
+        assert srv.batches_run == 1      # one 2-of-8 bucket, not two
+    finally:
+        srv.close()
 
 
 def test_far_deadline_does_not_split_bucket():
@@ -287,7 +296,7 @@ def test_far_deadline_does_not_split_bucket():
     srv.submit(0, 5, deadline_ms=60_000.0)
     for i in range(5):
         srv.submit(i, i + 2)
-    srv.drain()
+    srv.flush()
     assert srv.batches_run == 1          # plenty of budget: one fused batch
 
 
@@ -311,7 +320,7 @@ def test_delta_failure_rolls_back_to_pre_delta_snapshot(backend):
     v0, av0 = srv.session.cache_version, fr.arrays_version
     upd = srv.submit_delta(GraphDelta.insert([(u, v)]))
     post = srv.submit(u, v)
-    srv.drain()
+    srv.flush()
 
     assert upd.status == "failed"
     assert isinstance(upd.error, DeltaApplyFailed) and upd.error.rolled_back
@@ -323,15 +332,15 @@ def test_delta_failure_rolls_back_to_pre_delta_snapshot(backend):
     # the query behind the failed update answers against the pre-delta
     # graph, exactly once
     assert post.status == "done"
-    assert post.result == oracle_reach(g, u, v) is False
+    assert post.value == oracle_reach(g, u, v) is False
 
     # fault budget spent: the retried delta applies and flips the answer
     upd2 = srv.submit_delta(GraphDelta.insert([(u, v)]))
     post2 = srv.submit(u, v)
-    srv.drain()
-    assert upd2.status == "applied" and upd2.result is not None
+    srv.flush()
+    assert upd2.status == "applied" and upd2.value is not None
     assert srv.session.cache_version == v0 + 1
-    assert post2.result is True
+    assert post2.value is True
 
 
 @pytest.mark.parametrize("backend", ["vmap", "shard_map"])
@@ -346,10 +355,10 @@ def test_delta_rollback_with_dist_cache(backend):
     v0 = srv.session.cache_version
     upd = srv.submit_delta(GraphDelta.insert([(2, 3)]))
     q = srv.submit(2, 3, kind="dist")
-    srv.drain()
+    srv.flush()
     assert upd.status == "failed"
     assert srv.session.cache_version == v0
-    assert q.status == "done" and q.result == oracle_dist(g, 2, 3)
+    assert q.status == "done" and q.value == oracle_dist(g, 2, 3)
 
 
 # ---------------------------------------------------------------------------
@@ -381,9 +390,9 @@ def test_upload_failure_degrades_too():
     chaos = FaultInjector(seed=0, rates={"upload": 1.0})
     srv = _server(fr, backend="shard_map", chaos=chaos)
     r = srv.submit(0, 5)
-    srv.drain()
+    srv.flush()
     assert r.status == "done" and r.degraded
-    assert r.result == oracle_reach(g, 0, 5)
+    assert r.value == oracle_reach(g, 0, 5)
     assert srv.session.stats.degraded_groups == 1
 
 
@@ -418,7 +427,7 @@ def test_exactly_once_resolution_under_seeded_chaos(seed):
                 submitted.append(srv.submit(s, t, kind="rpq", automaton=qa))
         edge = [(int(rng.integers(g.n)), int(rng.integers(g.n)))]
         submitted.append(srv.submit_delta(GraphDelta.insert(edge)))
-    served = srv.drain()
+    served = srv.flush()
 
     # exactly-once: the served list is a permutation of the submissions
     assert sorted(map(id, served)) == sorted(map(id, submitted))
@@ -442,11 +451,11 @@ def test_exactly_once_resolution_under_seeded_chaos(seed):
             assert isinstance(r.error, DeadLetterError)
             continue
         if r.kind == "reach":
-            assert r.result == oracle_reach(cur, r.s, r.t)
+            assert r.value == oracle_reach(cur, r.s, r.t)
         elif r.kind == "dist":
-            assert r.result == oracle_dist(cur, r.s, r.t)
+            assert r.value == oracle_dist(cur, r.s, r.t)
         else:
-            assert r.result == oracle_rpq(cur, r.s, r.t, qa)
+            assert r.value == oracle_rpq(cur, r.s, r.t, qa)
 
 
 # ---------------------------------------------------------------------------
@@ -478,7 +487,7 @@ chaos = FaultInjector(seed=5, rates={"engine.shard_map": 0.01,
                                      "upload": 0.01,
                                      "delta.repair": 0.01},
                       poison=[poison])
-srv = QueryServer(fr, batch_size=8, chaos=chaos,
+srv = QueryServer(fr, batch_size=8, chaos=chaos, start=False,
                   retry=RetryPolicy(max_attempts=3, base_delay_ms=0.0))
 qa = build_query_automaton("(0|1)*", lambda x: int(x))
 rng = np.random.default_rng(3)
@@ -497,7 +506,7 @@ for round_ in range(4):
     submitted.append(srv.submit(*poison))          # the poison request
     edge = [(int(rng.integers(g.n)), int(rng.integers(g.n)))]
     submitted.append(srv.submit_delta(GraphDelta.insert(edge)))
-served = srv.drain()
+served = srv.flush()
 
 exactly_once = (sorted(map(id, served)) == sorted(map(id, submitted))
                 and len(set(map(id, served))) == len(served)
@@ -528,20 +537,20 @@ for r in submitted:
             want = oracle_dist(cur, r.s, r.t)
         else:
             want = oracle_rpq(cur, r.s, r.t, qa)
-        answers_ok = answers_ok and (r.result == want)
+        answers_ok = answers_ok and (r.value == want)
     else:
         unexpected_dead += 1
 
 # phase 2: force a total shard_map outage on the same fragmentation and
 # assert the vmap fallback serves exact answers flagged degraded=True
 chaos2 = FaultInjector(seed=6, rates={"engine.shard_map": 1.0})
-srv2 = QueryServer(fr, batch_size=8, chaos=chaos2, warm=False,
+srv2 = QueryServer(fr, batch_size=8, chaos=chaos2, warm=False, start=False,
                    retry=RetryPolicy(max_attempts=2, base_delay_ms=0.0))
 reqs2 = [srv2.submit(int(rng.integers(g.n)), int(rng.integers(g.n)))
          for _ in range(8)]
-srv2.drain()
+srv2.flush()
 degraded_ok = all(r.status == "done" and r.degraded
-                  and r.result == oracle_reach(cur, r.s, r.t)
+                  and r.value == oracle_reach(cur, r.s, r.t)
                   for r in reqs2)
 
 print(json.dumps({

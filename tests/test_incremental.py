@@ -16,8 +16,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (GraphDelta, apply_delta, build_query_automaton,
-                        dis_dist_batch, dis_reach_batch, dis_rpq_cached,
                         fragment_graph, get_rvset_cache, prepare_rvset_cache)
+# The rebuild-vs-maintained comparisons below want the raw batched kernels
+# (with the -1 "unreachable" sentinel), not session-level QueryResults; the
+# public dis_*_batch shims were removed in PR 8, so reach into the internal
+# cache engines directly.
+from repro.core.cache import dis_dist_batch, dis_reach_batch, rpq_cached
 from repro.core.incremental import (REBUILD_DEBT, changed_row_ids,
                                     pad_row_ids)
 from repro.graph import erdos_renyi, random_partition
@@ -111,8 +115,8 @@ def test_property_delta_stream_rpq(data):
             s = data.draw(st.integers(0, n - 1))
             t = data.draw(st.integers(0, n - 1))
             want = oracle_rpq(fr.g, s, t, qa)
-            assert dis_rpq_cached(fr, s, t, qa).answer == want, (s, t)
-            assert dis_rpq_cached(fresh, s, t, qa).answer == want, (s, t)
+            assert rpq_cached(fr, s, t, qa) == want, (s, t)
+            assert rpq_cached(fresh, s, t, qa) == want, (s, t)
 
 
 # ---------------------------------------------------------------------------
@@ -227,7 +231,7 @@ def test_changed_row_padding_buckets():
 
 def test_server_interleaved_updates_snapshot_consistency():
     g, part, fr = _dynamic_case(24, 30, 3, seed=11)
-    srv = QueryServer(fr, batch_size=4)
+    srv = QueryServer(fr, batch_size=4, start=False)
     rng = np.random.default_rng(1)
     s = t = None
     for _ in range(400):
@@ -239,10 +243,10 @@ def test_server_interleaved_updates_snapshot_consistency():
     q_before = srv.submit(s, t)
     upd = srv.submit_delta(GraphDelta.insert([(s, t)]))
     q_after = srv.submit(s, t)
-    srv.drain()
+    srv.flush()
     # the pre-update query saw the pre-delta snapshot
-    assert q_before.result is False and q_after.result is True
-    assert upd.result.mode in ("repair", "recompute")
+    assert q_before.result() is False and q_after.result() is True
+    assert upd.value.mode in ("repair", "recompute")
     assert q_before.cache_version < q_after.cache_version
     assert srv.updates_applied == 1
     # mixed stream stays correct against the evolving oracle
@@ -252,9 +256,9 @@ def test_server_interleaved_updates_snapshot_consistency():
         pre_g = fr.g
         srv.submit_delta(GraphDelta.insert(
             [(int(rng.integers(g.n)), int(rng.integers(g.n)))]))
-        srv.drain()
+        srv.flush()
         for r in reqs:
-            assert r.result == oracle_reach(pre_g, r.s, r.t)
+            assert r.result() == oracle_reach(pre_g, r.s, r.t)
 
 
 def test_server_failed_update_preserves_later_requests():
@@ -262,19 +266,19 @@ def test_server_failed_update_preserves_later_requests():
     eat the queue: pre- and post-update queries are served in the same
     drain (PR 7 replaced the old raise-out-of-drain behavior)."""
     g, part, fr = _dynamic_case(16, 24, 2, seed=13)
-    srv = QueryServer(fr, batch_size=4)
+    srv = QueryServer(fr, batch_size=4, start=False)
     present = set(zip(g.src.tolist(), g.dst.tolist()))
     missing = next((u, v) for u in range(g.n) for v in range(g.n)
                    if (u, v) not in present)
     q_before = srv.submit(0, 1)
     upd = srv.submit_delta(GraphDelta.delete([missing]))  # nonexistent edge
     q_after = srv.submit(2, 3)
-    served = srv.drain()
-    assert q_before.result == oracle_reach(g, 0, 1)       # flushed first
+    served = srv.flush()
+    assert q_before.result() == oracle_reach(g, 0, 1)     # flushed first
     assert upd.status == "failed" and srv.updates_failed == 1
     assert isinstance(upd.error, DeltaApplyFailed) and upd.error.rolled_back
     assert isinstance(upd.error.cause, ValueError)
-    assert q_after.result == oracle_reach(g, 2, 3)        # not blocked
+    assert q_after.result() == oracle_reach(g, 2, 3)      # not blocked
     assert srv.pending() == 0
     assert sorted(map(id, served)) == sorted(map(id, [q_before, upd, q_after]))
 
@@ -291,8 +295,8 @@ sys.path.insert(0, "__SRC__")
 import numpy as np
 from repro.graph import erdos_renyi, random_partition
 from repro.graph.graph import bfs_reachable
-from repro.core import (fragment_graph, prepare_rvset_cache, dis_reach_batch,
-                        GraphDelta)
+from repro.core import fragment_graph, prepare_rvset_cache, GraphDelta
+from repro.core.cache import dis_reach_batch
 from repro.core import incremental
 from repro.core.distributed import (apply_delta_sharded, fragment_mesh,
                                     lower_update_hlo)

@@ -193,10 +193,11 @@ def test_session_version_stamping_and_apply():
 # shims & stats consistency
 # ---------------------------------------------------------------------------
 
-def test_cache_bearing_shims_warn_seed_paths_do_not():
+def test_deprecated_shims_removed_seed_paths_warning_free():
+    """PR 8 retired the PR-4-deprecated cache-bearing shims; the seed
+    one-shot entry points survive and stay warning-free."""
     import warnings as _w
-    from repro.core import (dis_dist_batch, dis_dist_cached, dis_reach_batch,
-                            dis_reach_cached, dis_rpq_cached)
+    import repro.core
     g, fr = _case(12, 30, 2, 2)
     qa = _automaton("0*")
     with _w.catch_warnings():
@@ -204,13 +205,11 @@ def test_cache_bearing_shims_warn_seed_paths_do_not():
         dis_reach(fr, 0, 1)            # seed paths stay warning-free
         dis_dist(fr, 0, 1)
         dis_rpq(fr, 0, 1, qa)
-    for fn, args in [(dis_reach_cached, (fr, 0, 1)),
-                     (dis_dist_cached, (fr, 0, 1)),
-                     (dis_rpq_cached, (fr, 0, 1, qa)),
-                     (dis_reach_batch, (fr, [(0, 1)])),
-                     (dis_dist_batch, (fr, [(0, 1)]))]:
-        with pytest.warns(DeprecationWarning, match="repro.connect"):
-            fn(*args)
+    for name in ("dis_reach_cached", "dis_dist_cached", "dis_rpq_cached",
+                 "dis_reach_batch", "dis_dist_batch", "dis_rpq_batch"):
+        assert not hasattr(repro.core, name), name
+        assert not hasattr(repro.core.api, name), name
+        assert name not in repro.core.__all__
 
 
 def test_traffic_bits_consistent_across_kinds():
@@ -308,7 +307,7 @@ def test_server_submit_validates_kind_and_args():
 
 def test_server_serves_rpq_kind():
     g, fr = _case(18, 50, 3, 7)
-    srv = QueryServer(fr, batch_size=4)
+    srv = QueryServer(fr, batch_size=4, start=False)
     qa = _automaton(REGEXES[1])
     rng = np.random.default_rng(0)
     reqs = []
@@ -319,17 +318,17 @@ def test_server_serves_rpq_kind():
             reqs.append(srv.submit(s, t, kind="rpq", regex=REGEXES[1]))
         else:
             reqs.append(srv.submit(s, t, kind="rpq", automaton=qa))
-    srv.drain()
+    srv.flush()
     for r in reqs:
-        assert r.result == oracle_rpq(g, r.s, r.t, qa), (r.s, r.t)
+        assert r.value == oracle_rpq(g, r.s, r.t, qa), (r.s, r.t)
         assert r.cache_version is not None
 
 
 def test_server_mixed_batch_spanning_delta_snapshots():
     """Queries on both sides of a submit_delta answer against their own
-    snapshot, for all three kinds in one drain."""
+    snapshot, for all three kinds in one flush."""
     g, fr = _case(16, 26, 2, 8)
-    srv = QueryServer(fr, batch_size=8)
+    srv = QueryServer(fr, batch_size=8, start=False)
     qa = _automaton("(0|1|2)*")
     rng = np.random.default_rng(3)
     pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n)))
@@ -348,13 +347,13 @@ def test_server_mixed_batch_spanning_delta_snapshots():
     post = ([srv.submit(s, t) for s, t in pairs]
             + [srv.submit(s, t, kind="rpq", automaton=qa)
                for s, t in pairs])
-    srv.drain()
+    srv.flush()
     g2 = fr.g                                  # post-delta graph
     post_want = ([oracle_reach(g2, s, t) for s, t in pairs]
                  + [oracle_rpq(g2, s, t, qa) for s, t in pairs])
-    assert [r.result for r in pre] == pre_want
-    assert [r.result for r in post] == post_want
-    assert upd.result is not None and srv.updates_applied == 1
+    assert [r.value for r in pre] == pre_want
+    assert [r.value for r in post] == post_want
+    assert upd.value is not None and srv.updates_applied == 1
     # snapshot stamps: everything before the delta at version v, after > v
     v_pre = {r.cache_version for r in pre}
     v_post = {r.cache_version for r in post}
@@ -444,7 +443,7 @@ mesh_ok = (res2[0].answer == oracle_reach(g, 0, 5)
 gs = erdos_renyi(24, 40, n_labels=3, seed=8)
 frs = fragment_graph(gs, random_partition(gs, 4, 3), 4,
                      reserve_boundary=8, reserve_edges=16, reserve_stubs=8)
-srv = QueryServer(frs, batch_size=16)
+srv = QueryServer(frs, batch_size=16, start=False)
 qa2 = build_query_automaton("(0|1|2)*", lambda x: int(x))
 pairs = [(int(rng.integers(gs.n)), int(rng.integers(gs.n)))
          for _ in range(4)]
@@ -462,12 +461,12 @@ pre_want = want_all(gs)
 upd = srv.submit_delta(GraphDelta.insert(
     [(int(rng.integers(gs.n)), int(rng.integers(gs.n))) for _ in range(3)]))
 post = submit_all()
-srv.drain()
+srv.flush()
 post_want = want_all(frs.g)                   # post-delta graph
 v_pre = {r.cache_version for r in pre}
 v_post = {r.cache_version for r in post}
-server_ok = ([r.result for r in pre] == pre_want
-             and [r.result for r in post] == post_want
+server_ok = ([r.value for r in pre] == pre_want
+             and [r.value for r in post] == post_want
              and len(v_pre) == 1 and len(v_post) == 1
              and v_post.pop() > v_pre.pop())
 
@@ -482,7 +481,7 @@ print(json.dumps({"backend": sess.backend, "ok": got == want,
                   "big_mesh_raises": bool(big_mesh_raises),
                   "mesh_ok": bool(mesh_ok),
                   "server_backend": srv.session.backend,
-                  "update_mode": upd.result.mode,
+                  "update_mode": upd.value.mode,
                   "server_ok": bool(server_ok)}))
 """
 
@@ -531,7 +530,7 @@ def test_auto_backend_respects_explicit_mesh(shard_map_report):
 
 
 def test_server_shard_map_mixed_batch_spanning_delta(shard_map_report):
-    """QueryServer on the shard_map backend: all three kinds in one drain,
+    """QueryServer on the shard_map backend: all three kinds in one flush,
     split across a submit_delta, answer against their own snapshots."""
     rep = shard_map_report
     assert rep["server_backend"] == "shard_map", rep
