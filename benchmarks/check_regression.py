@@ -41,7 +41,13 @@ shipping in an artifact:
   at least match the synchronous drain pattern's throughput at equal
   work (``throughput_ratio`` >= 1.0; the fast run gets a noise
   allowance), and the fast run's open-loop p99 latency must stay within
-  3x the committed baseline (with a small-run absolute floor).
+  3x the committed baseline (with a small-run absolute floor);
+* MVCC snapshot serving (``BENCH_pr9``): both runs must report
+  ``answers_ok`` (every read verified against the graph snapshot named
+  by its stamped ``cache_version``) and carry the kernel roofline rows
+  (report-only — no perf gate on achieved-vs-peak yet); the committed
+  run's worst-mix barrier/mvcc read-p95 ratio must show MVCC retiring
+  the write stall by >= 2x (the fast run gets a noise floor).
 
 Exits non-zero with a FAIL line per violated bound.
 """
@@ -64,6 +70,8 @@ MIN_ASYNC_THROUGHPUT_RATIO_FULL = 1.0
 MIN_ASYNC_THROUGHPUT_RATIO_FAST = 0.7
 ASYNC_P99_REGRESSION_FACTOR = 3.0
 ASYNC_P99_FLOOR_MS = 50.0
+MIN_MVCC_P95_RATIO_FULL = 2.0
+MIN_MVCC_P95_RATIO_FAST = 1.2
 
 
 def _load(path: str) -> dict:
@@ -246,6 +254,36 @@ def main(argv=None) -> int:
         p99_fast <= p99_limit,
         f"fast {p99_fast:.1f}ms vs committed {p99_base:.1f}ms "
         f"(limit {p99_limit:.1f}ms)",
+    )
+
+    base9 = _load(f"{root}/BENCH_pr9.json")
+    fast9 = _load(f"{root}/BENCH_pr9.fast.json")
+    for tag, rep in (("committed", base9), ("fast", fast9)):
+        check(
+            f"mvcc answers_ok ({tag})",
+            rep["answers_ok"],
+            "every read exact against the per-snapshot replay oracle "
+            "(stamped cache_version -> replayed graph), both modes",
+        )
+        check(
+            f"mvcc roofline coverage ({tag})",
+            len(rep["roofline"]["kernels"]) >= 3,
+            f"kernel roofline rows {sorted(rep['roofline']['kernels'])} "
+            "(report-only, no perf gate)",
+        )
+    ratio9_full = base9["read_p95_ratio_min"]
+    check(
+        "mvcc read_p95_ratio_min (committed)",
+        ratio9_full >= MIN_MVCC_P95_RATIO_FULL,
+        f"committed barrier/mvcc read-p95 {ratio9_full:.2f}x over all "
+        f"mixes (floor {MIN_MVCC_P95_RATIO_FULL}x)",
+    )
+    ratio9_fast = fast9["read_p95_ratio_min"]
+    check(
+        "mvcc read_p95_ratio_min (fast run)",
+        ratio9_fast >= MIN_MVCC_P95_RATIO_FAST,
+        f"fast barrier/mvcc read-p95 {ratio9_fast:.2f}x over all mixes "
+        f"(floor {MIN_MVCC_P95_RATIO_FAST}x)",
     )
 
     if failures:

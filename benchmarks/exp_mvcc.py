@@ -1,0 +1,215 @@
+"""MVCC snapshot store vs the barrier write path under a mixed
+read/write open-loop workload (ISSUE-9 / DESIGN.md Sec. 9).
+
+One fragmentation, one arrival schedule, two server modes at **equal
+work**:
+
+* **barrier** (PR-8 default): every delta fences the queue — queries
+  behind it wait for the whole repair;
+* **mvcc** (``QueryServer(..., mvcc=True)``): deltas commit as
+  copy-on-write versions on the repair worker while query chunks keep
+  serving the pinned head snapshot.
+
+Two mixes (95/5 and 50/50 read/write) are paced open-loop (the schedule
+never waits for completions, so write stalls show up as read latency
+instead of being hidden by back-pressure), and the headline number is the
+read p95 during sustained updates — ``check_regression`` gates the
+barrier/mvcc ratio (MVCC must actually retire the write stall) and
+``answers_ok``.
+
+Answers are oracle-checked **per snapshot**: each applied delta bumps the
+rvset-cache version exactly once, so a read's stamped ``cache_version``
+names the graph snapshot it was served against; every answer is verified
+with networkx on exactly that replayed graph (pre-delta reads against
+pre-delta snapshots — the MVCC consistency model, checked end to end).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import GraphDelta, fragment_graph
+from repro.graph import Graph, erdos_renyi, random_partition
+from repro.serve import QueryServer
+from repro.serve.telemetry import percentile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from oracles import oracle_dist, oracle_reach  # noqa: E402
+
+RESULT_TIMEOUT_S = 600.0
+MIXES = (("95_5", 0.05), ("50_50", 0.50))
+
+
+def _snapshot_graphs(g: Graph, deltas: List[list]) -> List[Graph]:
+    """``snaps[i]`` = the graph after the first ``i`` deltas (host replay
+    of the committed version sequence)."""
+    snaps = [g]
+    for edges in deltas:
+        prev = snaps[-1]
+        e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        snaps.append(Graph(prev.n,
+                           np.concatenate([prev.src, e[:, 0]]),
+                           np.concatenate([prev.dst, e[:, 1]]),
+                           prev.labels, prev.label_names))
+    return snaps
+
+
+def _schedule(n_events: int, write_frac: float, g: Graph,
+              rng) -> Tuple[List[tuple], int]:
+    """One deterministic open-loop event list: reads interleaved with
+    evenly spaced writes (same schedule for both server modes)."""
+    n_upd = max(2, int(round(n_events * write_frac)))
+    spacing = n_events / n_upd
+    write_at = {int((j + 0.5) * spacing) for j in range(n_upd)}
+    assert len(write_at) == n_upd
+    events, wi = [], 0
+    for i in range(n_events):
+        if i in write_at:
+            events.append(("write", wi))
+            wi += 1
+        else:
+            kind = "dist" if i % 2 else "reach"
+            events.append(("read", int(rng.integers(g.n)),
+                           int(rng.integers(g.n)), kind))
+    return events, n_upd
+
+
+def _check_reads(snaps: List[Graph], c0: int, reads) -> bool:
+    ok = True
+    for s, t, kind, fut in reads:
+        idx = fut.cache_version - c0
+        if not 0 <= idx < len(snaps):
+            return False
+        g_i = snaps[idx]
+        want = (oracle_dist(g_i, s, t) if kind == "dist"
+                else oracle_reach(g_i, s, t))
+        ok = ok and fut.value == want
+    return ok
+
+
+def _run_pass(mode: str, fr, events, deltas, snaps, batch_size: int,
+              offered_qps: float) -> Dict:
+    srv = QueryServer(fr, batch_size=batch_size, with_dist=True,
+                      batch_wait_ms=2.0, mvcc=(mode == "mvcc"))
+    # probe before the window: pins the initial head, yields the base
+    # cache_version every stamped read is mapped through
+    probe = srv.submit(0, 1)
+    probe.result(timeout=RESULT_TIMEOUT_S)
+    c0 = probe.cache_version
+
+    reads, upds = [], []
+    t0 = time.perf_counter()
+    for i, ev in enumerate(events):
+        lag = t0 + i / offered_qps - time.perf_counter()
+        if lag > 0:
+            time.sleep(lag)              # fixed schedule, never back-off
+        if ev[0] == "write":
+            upds.append(srv.submit_delta(GraphDelta.insert(deltas[ev[1]])))
+        else:
+            _, s, t, kind = ev
+            reads.append((s, t, kind, srv.submit(s, t, kind=kind)))
+    for *_, fut in reads:
+        fut.result(timeout=RESULT_TIMEOUT_S)
+    reads_done_s = time.perf_counter() - t0
+    for u in upds:
+        u.result(timeout=RESULT_TIMEOUT_S)
+    total_s = time.perf_counter() - t0
+
+    # every delta committed: a fresh read must see the final snapshot
+    # (and exactly one version bump per applied delta — the stamp's
+    # contract with the replay oracle above)
+    fin = srv.submit(0, 1)
+    fin.result(timeout=RESULT_TIMEOUT_S)
+    stamp_ok = fin.cache_version == c0 + len(upds)
+    gauges: Optional[Dict] = srv.telemetry().get("mvcc")
+    srv.close()
+
+    lat_ms = [fut.latency_s * 1e3 for *_, fut in reads]
+    upd_ms = [u.latency_s * 1e3 for u in upds]
+    return {
+        "read_p50_ms": percentile(lat_ms, 0.50),
+        "read_p95_ms": percentile(lat_ms, 0.95),
+        "read_p99_ms": percentile(lat_ms, 0.99),
+        "update_p50_ms": percentile(upd_ms, 0.50),
+        "update_p95_ms": percentile(upd_ms, 0.95),
+        "reads_done_s": reads_done_s,
+        "total_s": total_s,
+        "answers_ok": bool(_check_reads(snaps, c0, reads)),
+        "stamp_ok": bool(stamp_ok),
+        "mvcc_gauges": gauges,
+    }
+
+
+def exp_mvcc(n: int = 900, m: int = 3600, k: int = 4, batch_size: int = 16,
+             n_events: int = 160, edges_per_delta: int = 2,
+             seed: int = 7) -> Dict:
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    rng = np.random.default_rng(3)
+
+    # one delta pool sized for the write-heaviest mix; headroom reserves
+    # cover the worst case of every inserted edge landing in one fragment
+    n_upd_max = max(2, int(round(n_events * max(f for _, f in MIXES))))
+    pool = [[(int(rng.integers(n)), int(rng.integers(n)))
+             for _ in range(edges_per_delta)] for _ in range(n_upd_max)]
+    headroom = n_upd_max * edges_per_delta + 8
+    part = random_partition(g, k, 1)
+
+    def fresh_fr():
+        return fragment_graph(g, part, k, reserve_boundary=headroom,
+                              reserve_edges=headroom, reserve_stubs=headroom)
+
+    # -- warmup on a throwaway fragmentation: every (kind, bucket-shape)
+    #    query compile plus one repair compile, out of the timed windows
+    fr_w = fresh_fr()
+    warm = QueryServer(fr_w, batch_size=batch_size, with_dist=True,
+                       start=False)
+    for size in (1, batch_size):
+        for kind in ("reach", "dist"):
+            for _ in range(size):
+                warm.submit(int(rng.integers(n)), int(rng.integers(n)),
+                            kind=kind)
+            warm.flush()
+    warm.submit_delta(GraphDelta.insert(pool[0]))
+    warm.flush()
+    # closed-loop read capacity on the warm server sets the offered rate
+    n_cal = 3 * batch_size
+    t0 = time.perf_counter()
+    for _ in range(n_cal):
+        warm.submit(int(rng.integers(n)), int(rng.integers(n)))
+    warm.flush()
+    read_qps = n_cal / (time.perf_counter() - t0)
+    warm.close()
+    offered_qps = float(np.clip(0.5 * read_qps, 40.0, 500.0))
+
+    answers_ok = True
+    mixes: Dict[str, Dict] = {}
+    ratios = []
+    for name, frac in MIXES:
+        ev_rng = np.random.default_rng(11)
+        events, n_upd = _schedule(n_events, frac, g, ev_rng)
+        deltas = pool[:n_upd]
+        snaps = _snapshot_graphs(g, deltas)
+        row: Dict = {"n_reads": n_events - n_upd, "n_updates": n_upd}
+        for mode in ("barrier", "mvcc"):
+            res = _run_pass(mode, fresh_fr(), events, deltas, snaps,
+                            batch_size, offered_qps)
+            answers_ok = answers_ok and res["answers_ok"] and res["stamp_ok"]
+            row[mode] = res
+        row["read_p95_ratio"] = (row["barrier"]["read_p95_ms"]
+                                 / max(row["mvcc"]["read_p95_ms"], 1e-9))
+        ratios.append(row["read_p95_ratio"])
+        mixes[name] = row
+
+    return {
+        "backend": "vmap",
+        "n": n, "m": m, "k": k, "batch_size": batch_size,
+        "n_events": n_events, "edges_per_delta": edges_per_delta,
+        "offered_qps": offered_qps,
+        "answers_ok": bool(answers_ok),
+        "read_p95_ratio_min": min(ratios),
+        "mixes": mixes,
+    }

@@ -17,6 +17,8 @@ import traceback
 
 from . import paper_experiments as pe
 from .exp_async_serve import exp_async_serve
+from .exp_mvcc import exp_mvcc
+from .roofline import kernel_report
 
 
 def _emit(section: str, rows):
@@ -201,6 +203,40 @@ def main() -> None:
                        "fast_mode": fast, **res}, f, indent=2)
         print(f"# wrote {out}")
 
+    def mvcc_bench():
+        res = exp_mvcc(n=int(800 * scale) + 100,
+                       m=int(3200 * scale) + 400,
+                       n_events=64 if fast else 160)
+        for mix, row in res["mixes"].items():
+            print(f"mvcc/{mix}_barrier,{row['barrier']['read_p95_ms'] * 1e3:.1f},"
+                  f"read_p95_ms={row['barrier']['read_p95_ms']:.1f};"
+                  f"update_p95_ms={row['barrier']['update_p95_ms']:.1f}")
+            print(f"mvcc/{mix}_mvcc,{row['mvcc']['read_p95_ms'] * 1e3:.1f},"
+                  f"read_p95_ms={row['mvcc']['read_p95_ms']:.1f};"
+                  f"update_p95_ms={row['mvcc']['update_p95_ms']:.1f};"
+                  f"read_p95_ratio={row['read_p95_ratio']:.2f}")
+        print(f"mvcc/summary,0.0,"
+              f"read_p95_ratio_min={res['read_p95_ratio_min']:.2f};"
+              f"answers_ok={res['answers_ok']};"
+              f"offered_qps={res['offered_qps']:.0f}")
+        # report-only roofline trajectory for the semiring kernels (no
+        # gate: CPU CI is far off the TPU peaks by construction)
+        roof = kernel_report(side=128 if fast else 256,
+                             batch=32 if fast else 64,
+                             repeats=5 if fast else 10)
+        for kname, r in roof["kernels"].items():
+            print(f"roofline/{kname},{r['time_s'] * 1e6:.1f},"
+                  f"frac_peak_flops={r['frac_peak_flops']:.2e};"
+                  f"frac_peak_bw={r['frac_peak_bw']:.2e};"
+                  f"intensity={r['arithmetic_intensity']:.2f};"
+                  f"bound={r['bound']}")
+        out = "BENCH_pr9" + suffix
+        with open(out, "w") as f:
+            json.dump({"experiment": "mvcc_snapshot_serving",
+                       "fast_mode": fast, **res, "roofline": roof},
+                      f, indent=2)
+        print(f"# wrote {out}")
+
     section("# ISSUE-5: sharded one-collective batches, all query kinds",
             sharded_mixed)
     section("# ISSUE-6: k >> d scale-out, fragments packed per device",
@@ -209,6 +245,8 @@ def main() -> None:
             "schedule", chaos_bench)
     section("# ISSUE-8: continuous-batching async serving vs the sync "
             "drain pattern", async_serve)
+    section("# ISSUE-9: MVCC non-blocking deltas vs the barrier write "
+            "path + kernel roofline", mvcc_bench)
 
     if failures:
         print(f"# FAILED sections ({len(failures)}): {failures}",

@@ -76,16 +76,28 @@ class RvsetCache:
     def nb(self) -> int:
         return self.fr.n_boundary
 
-    def refresh_device_arrays(self) -> None:
+    def refresh_device_arrays(self, touched=None) -> None:
         """Re-upload the (host-mutated) fragment arrays after a delta; the
         cached rpq closures are dropped (they bake in the old arrays) and
         rebuild lazily on the next regular query.
+
+        ``touched`` names the subset of ``fr.arrays`` keys the delta
+        actually mutated (``incremental.touched_arrays``); only those are
+        re-uploaded and the rest keep their device buffers — the
+        device-side half of the copy-on-write story that lets MVCC
+        versions share untouched buffers (``None`` re-uploads everything).
+        A *new* dict is always bound so cache clones sharing the old dict
+        (``core.versions``) never observe the refresh.
 
         ``jnp.array`` (copy=True), NOT ``jnp.asarray``: on CPU the latter
         may zero-copy alias the host buffer, and these host arrays are
         mutated in place by ``Fragmentation.apply_delta`` — an aliased
         device array would see mid-update state and survive a rollback."""
-        self.arrays = {k: jnp.array(v) for k, v in self.fr.arrays.items()}
+        names = self.fr.arrays.keys() if touched is None else touched
+        arrays = dict(self.arrays)
+        for k in names:
+            arrays[k] = jnp.array(self.fr.arrays[k])
+        self.arrays = arrays
         self.part_b = self.fr.boundary_owner()
         self.rpq_closures.clear()
         self.version += 1

@@ -26,6 +26,7 @@ contributions together.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -366,18 +367,31 @@ def _array_pads(fr: Fragmentation) -> dict:
                 n_local=0)
 
 
+# live entries in a Fragmentation's device-upload memo.  More than one
+# because the MVCC store (core.versions) keeps several versions live and
+# each version's repair re-uploads under a new arrays_version; a small LRU
+# stops versions from thrashing each other's uploads while bounding device
+# memory held by stale versions.
+_UPLOAD_MEMO_CAP = 4
+
+
 def _device_inputs(fr: Fragmentation, placement: Placement) -> dict:
     """Query-independent device uploads for the batched sharded engines —
     the fragment arrays plus the boundary-ownership gathers, packed into
-    the placement's device-major [d*fpd, ...] layout — memoized on
-    ``(fr.arrays_version, placement)`` so steady-state batches skip the
-    host-to-device copy of the edge lists entirely; any
-    ``apply_delta``/``rebuild`` (which mutates the host arrays in place
-    and bumps the version) invalidates the memo, as does switching
-    placements."""
-    memo = fr.__dict__.get("_sharded_device_inputs")
-    if (memo is not None and memo["version"] == fr.arrays_version
-            and memo["placement"] == placement.cache_key()):
+    the placement's device-major [d*fpd, ...] layout — memoized in a small
+    per-Fragmentation LRU keyed on ``(fr.arrays_version, placement)`` so
+    steady-state batches skip the host-to-device copy of the edge lists
+    entirely; any ``apply_delta``/``rebuild`` (which mutates the host
+    arrays in place and bumps the version) starts a fresh entry, as does
+    switching placements.  Several keys stay live so MVCC versions and
+    alternate placements don't thrash each other's uploads."""
+    memos = fr.__dict__.get("_sharded_device_inputs")
+    if memos is None:
+        memos = fr.__dict__["_sharded_device_inputs"] = OrderedDict()
+    key = (fr.arrays_version, placement.cache_key())
+    memo = memos.get(key)
+    if memo is not None:
+        memos.move_to_end(key)
         return memo
     perm = placement.perm()
     pads = _array_pads(fr)
@@ -393,7 +407,9 @@ def _device_inputs(fr: Fragmentation, placement: Placement) -> dict:
         own=jnp.asarray(_pack_rows(own, perm, False)),
         mine=jnp.asarray(_pack_rows(mine, perm, False)),
         local_b=jnp.asarray(fr.boundary_local()))
-    fr.__dict__["_sharded_device_inputs"] = memo
+    memos[key] = memo
+    while len(memos) > _UPLOAD_MEMO_CAP:
+        memos.popitem(last=False)
     return memo
 
 
@@ -678,7 +694,7 @@ def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None,
     row_ids = incremental.changed_row_ids(fr, report.dirty)
     if row_ids.size == 0:      # dirty fragments own no boundary rows:
         incremental._update_frontiers(cache, report.dirty, warm=True)
-        cache.refresh_device_arrays()
+        cache.refresh_device_arrays(incremental.touched_arrays(report))
         return incremental.UpdateStats(mode="repair_sharded",
                                        **incremental._stats_base(report))
     padded = incremental.pad_row_ids(row_ids, cap=fr.n_boundary)
@@ -688,7 +704,7 @@ def apply_delta_sharded(fr: Fragmentation, delta, mesh: Optional[Mesh] = None,
                                        lambda ref, v: ref.max(v))
     cache.closure = incremental._rank_update_bool(cache.closure, rows_new,
                                                   padded)
-    cache.refresh_device_arrays()
+    cache.refresh_device_arrays(incremental.touched_arrays(report))
     return incremental.UpdateStats(mode="repair_sharded",
                                    changed_rows=int(row_ids.size),
                                    **incremental._stats_base(report))

@@ -76,6 +76,25 @@ def _stats_base(report) -> dict:
                 new_boundary=len(report.new_boundary))
 
 
+# fragment arrays a cross-edge insertion can mutate beyond the edge lists:
+# _ensure_boundary touches src_local/src_row, _ensure_stub touches
+# gids/labels/tgt_local/n_local (fragments.Fragmentation.apply_delta)
+_CROSS_TOUCHED = ("src_local", "src_row", "gids", "labels", "tgt_local",
+                  "n_local")
+
+
+def touched_arrays(report) -> set:
+    """``fr.arrays`` keys the applied delta mutated, from its
+    :class:`~repro.core.fragments.DeltaReport` — what
+    :meth:`RvsetCache.refresh_device_arrays` needs to re-upload.
+    Intra-fragment edges and deletions only rewrite the edge lists; cross
+    insertions additionally grow stubs/sources (see ``_CROSS_TOUCHED``)."""
+    names = {"esrc", "edst"}
+    if report.n_add_cross:
+        names.update(_CROSS_TOUCHED)
+    return names
+
+
 def rebuild_cache(fr: Fragmentation, old_version: int, report,
                   with_dist: bool, use_pallas="auto",
                   reason: str = "") -> UpdateStats:
@@ -125,16 +144,16 @@ def apply_delta(fr: Fragmentation, delta: GraphDelta,
             return rebuild_cache(fr, cache.version, report, with_dist,
                                  use_pallas, reason="repair debt")
         _recompute(cache, report.dirty, warm=False, use_pallas=use_pallas)
-        cache.refresh_device_arrays()
+        cache.refresh_device_arrays(touched_arrays(report))
         return UpdateStats(mode="recompute", **base)
     if dirty_frac > RECOMPUTE_DIRTY_FRAC:
         # insert-only but wide: the changed-row block is most of the matrix,
         # so a (warm-started) recompute is cheaper than the rank update
         _recompute(cache, report.dirty, warm=True, use_pallas=use_pallas)
-        cache.refresh_device_arrays()
+        cache.refresh_device_arrays(touched_arrays(report))
         return UpdateStats(mode="recompute", **base)
     changed = _repair_insert(cache, report.dirty, use_pallas=use_pallas)
-    cache.refresh_device_arrays()
+    cache.refresh_device_arrays(touched_arrays(report))
     return UpdateStats(mode="repair", changed_rows=changed, **base)
 
 

@@ -204,10 +204,27 @@ class QuerySession:
                 self.stats.rollbacks += 1
                 raise DeltaApplyFailed(exc) from exc
 
+    def repair_on(self, fr: Fragmentation,
+                  delta: GraphDelta) -> incremental.UpdateStats:
+        """Repair ``fr``'s caches for ``delta`` — the MVCC building block
+        (:mod:`repro.core.versions`).  Unlike :meth:`apply` this neither
+        takes the session lock nor snapshots: ``fr`` is a private
+        copy-on-write clone that no reader can see, so the repair runs
+        concurrently with queries against the head version, and a failed
+        repair is handled by *dropping* the clone (the head was never
+        touched) rather than restoring a snapshot."""
+        self.stats.updates += 1
+        if self.backend == "shard_map" and fr.rvset_cache is not None:
+            from . import distributed
+            return distributed.apply_delta_sharded(
+                fr, delta, mesh=self._mesh, placement=self.placement,
+                chaos=self.chaos)
+        return incremental.apply_delta(fr, delta, chaos=self.chaos)
+
     # -- query execution ---------------------------------------------------
 
     def run(self, queries: Union[Query, Sequence[Query]],
-            ) -> List[QueryResult]:
+            version=None) -> List[QueryResult]:
         """Answer a heterogeneous batch; results in submission order.
 
         The batch is grouped by (kind, automaton) and each group is served
@@ -215,28 +232,41 @@ class QuerySession:
         per-query seed evaluations (``cache='none'``).  Every result is
         stamped with the cache snapshot it was computed against.
 
+        ``version``: an optional pinned MVCC :class:`~repro.core.versions.
+        Version` — the batch then runs against that snapshot's
+        fragmentation and cache instead of ``self.fr``, and results are
+        stamped with *its* ``cache_version``.  This is how the async
+        engine serves reads while the next version repairs concurrently.
+
         Thread-safe: the whole batch runs under the session lock, so a
         concurrent :meth:`apply` can never move the snapshot between a
-        group's execution and its ``cache_version`` stamp.
+        group's execution and its ``cache_version`` stamp.  (MVCC repairs
+        hold the lock only for the copy-on-write clone, never for the
+        repair itself — see :meth:`repair_on` — so versioned batches wait
+        at most one memcpy, never a repair.)
         """
         if isinstance(queries, (Reach, Dist, Rpq)):
             queries = [queries]
         queries = list(queries)
+        fr = self.fr if version is None else version.fr
         with self._lock:
             plan = plan_queries(queries, self._resolve_automaton)
             self.last_plan = plan
             results: List[Optional[QueryResult]] = [None] * len(queries)
             for group in plan.groups:
                 if self.cache_mode == "amortized":
-                    self._run_group_cached(group, results)
+                    self._run_group_cached(fr, group, results)
                 else:
-                    self._run_group_uncached(group, results)
+                    self._run_group_uncached(fr, group, results)
             # uncached execution never consults the cache: stamp None even
             # if a cache happens to exist on the shared fragmentation
-            version = (self.cache_version if self.cache_mode == "amortized"
-                       else None)
+            if self.cache_mode != "amortized":
+                stamp = None
+            else:
+                c = fr.rvset_cache
+                stamp = None if c is None else c.version
         for r in results:
-            r.cache_version = version
+            r.cache_version = stamp
             r.status = Status.DONE
         self.stats.queries += len(queries)
         self.stats.batches += 1
@@ -270,15 +300,16 @@ class QuerySession:
                 self._regex_cache[q.regex] = qa
             return qa
 
-    def _run_group_cached(self, group: ExecutionGroup, results) -> None:
+    def _run_group_cached(self, fr: Fragmentation, group: ExecutionGroup,
+                          results) -> None:
         """One compiled batched execution for the whole group (padded to
         the group's bucket size; pad answers are discarded).  On the
         shard_map backend every kind routes through its one-collective
         sharded batch engine, so the paper's guarantees survive fusion for
         all three query classes (DESIGN.md Sec. 3.3)."""
         pairs = group.pairs()
-        stats = self._group_stats(group)
-        ans, degraded = self._execute_group(group.kind, pairs,
+        stats = self._group_stats(fr, group)
+        ans, degraded = self._execute_group(fr, group.kind, pairs,
                                             group.automaton)
         if group.kind == "reach":
             for i, q, a, st in zip(group.indices, group.queries, ans, stats):
@@ -296,7 +327,7 @@ class QuerySession:
                 results[i].degraded = True
         self.stats.executions += 1
 
-    def _execute_group(self, kind: str, pairs, qa):
+    def _execute_group(self, fr: Fragmentation, kind: str, pairs, qa):
         """One batched engine execution; returns ``(answers, degraded)``.
 
         On the shard_map backend an engine/upload failure **degrades**
@@ -310,32 +341,32 @@ class QuerySession:
             try:
                 if kind == "reach":
                     return distributed.dis_reach_batch_sharded(
-                        self.fr, pairs, mesh=self._mesh,
+                        fr, pairs, mesh=self._mesh,
                         placement=self.placement, chaos=self.chaos), False
                 if kind == "dist":
                     return distributed.dis_dist_batch_sharded(
-                        self.fr, pairs, mesh=self._mesh,
+                        fr, pairs, mesh=self._mesh,
                         placement=self.placement, chaos=self.chaos), False
                 return distributed.dis_rpq_batch_sharded(
-                    self.fr, pairs, qa, mesh=self._mesh,
+                    fr, pairs, qa, mesh=self._mesh,
                     placement=self.placement, chaos=self.chaos), False
             except Exception:
                 self.stats.degraded_groups += 1
-                return self._execute_group_vmap(kind, pairs, qa), True
-        return self._execute_group_vmap(kind, pairs, qa), False
+                return self._execute_group_vmap(fr, kind, pairs, qa), True
+        return self._execute_group_vmap(fr, kind, pairs, qa), False
 
-    def _execute_group_vmap(self, kind: str, pairs, qa):
+    def _execute_group_vmap(self, fr: Fragmentation, kind: str, pairs, qa):
         if self.chaos is not None:
             self.chaos.maybe_fail("engine.vmap", pairs=pairs)
         if kind == "reach":
-            return _cache.dis_reach_batch(self.fr, pairs)
+            return _cache.dis_reach_batch(fr, pairs)
         if kind == "dist":
-            return _cache.dis_dist_batch(self.fr, pairs)
-        return _cache.dis_rpq_batch(self.fr, pairs, qa)
+            return _cache.dis_dist_batch(fr, pairs)
+        return _cache.dis_rpq_batch(fr, pairs, qa)
 
-    def _run_group_uncached(self, group: ExecutionGroup, results) -> None:
+    def _run_group_uncached(self, fr: Fragmentation, group: ExecutionGroup,
+                            results) -> None:
         """Seed one-shot engine, one evaluation per query (cache='none')."""
-        fr = self.fr
         for i, q in zip(group.indices, group.queries):
             if group.kind == "reach":
                 results[i] = exec_reach(fr, q.s, q.t,
@@ -347,7 +378,8 @@ class QuerySession:
                                       return_matrix=q.return_matrix)
             self.stats.executions += 1
 
-    def _group_stats(self, group: ExecutionGroup) -> List[QueryStats]:
+    def _group_stats(self, fr: Fragmentation,
+                     group: ExecutionGroup) -> List[QueryStats]:
         """Per-query stats whose SUM over the group is exact: a fused group
         ships ONE collective of ``traffic_bits(kind, states, batch=padded)``
         bits total (the padded batch is what actually rides the wire), so
@@ -355,7 +387,6 @@ class QuerySession:
         fair split and the single collective round is stamped on the first
         query — summing :class:`QueryStats` over any group then reports
         the group's real wire cost instead of overstating it N-fold."""
-        fr = self.fr
         states = 1 if group.automaton is None else group.automaton.n_states
         total = fr.traffic_bits(group.kind, states=states,
                                 batch=group.padded_size)

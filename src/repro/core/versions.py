@@ -1,0 +1,279 @@
+"""MVCC snapshot store: immutable ``(Fragmentation, RvsetCache)`` versions
+with copy-on-write deltas and concurrent repair (DESIGN.md Sec. 9).
+
+The serving engine's write problem: ``session.apply`` mutates the head
+fragmentation *in place*, so every delta is a structural barrier — no query
+may overlap the repair.  This module removes the barrier by making deltas
+produce **new versions** instead of mutating the current one:
+
+* a :class:`Version` is an immutable published snapshot — nothing mutates
+  its ``fr``/cache after publication, so any number of readers can run
+  against it lock-free once pinned;
+* :func:`cow_clone` builds the next version from the head by copying ONLY
+  what ``apply_delta`` can touch (the padded-headroom design keeps every
+  array shape static, so the copy is a handful of small host arrays —
+  edge lists always, the stub/boundary family only for cross-edge deltas)
+  while sharing everything else by reference, including the cache's
+  device buffers (``refresh_device_arrays(touched=...)`` re-uploads only
+  the mutated arrays and binds a *new* dict, so the shared buffers of
+  older versions are never observed to change);
+* :meth:`VersionedCacheStore.commit_delta` runs the repair on the private
+  clone — holding the session lock only for the clone memcpy, never for
+  the repair — and publishes the result as the new head.  Readers that
+  pinned an older version keep it alive until they release it; a failed
+  repair is simply **dropped** (the head was never touched), which retires
+  PR-7's snapshot/restore rollback on this path.
+
+Consistency model: readers always pin the *head* (latest fully-repaired
+version) — monotonic reads; a delta becomes visible exactly when its
+repair publishes.  ``UpdateFuture.result()`` is the commit point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..errors import DeltaApplyFailed
+from . import incremental
+from .cache import RvsetCache
+from .fragments import Fragmentation, GraphDelta
+
+# fr.arrays keys apply_delta may mutate, by delta shape.  Deletions and
+# intra-fragment insertions only rewrite edge slots; cross-fragment
+# insertions can additionally activate boundary slots and virtual stubs.
+_COW_ALWAYS = ("esrc", "edst")
+_COW_CROSS = ("src_local", "src_row", "gids", "labels", "tgt_local",
+              "n_local")
+
+
+def touched_array_names(fr: Fragmentation, delta: GraphDelta) -> set:
+    """Prospective upper bound on the ``fr.arrays`` keys applying ``delta``
+    to ``fr`` can mutate — what :func:`cow_clone` must copy (the exact
+    post-hoc set is :func:`incremental.touched_arrays`, but the clone has
+    to copy *before* the delta runs)."""
+    names = set(_COW_ALWAYS)
+    if delta.n_add and bool(np.any(fr.part[delta.add_src]
+                                   != fr.part[delta.add_dst])):
+        names.update(_COW_CROSS)
+    return names
+
+
+def _clone_cache(clone_fr: Fragmentation,
+                 base: Optional[RvsetCache]) -> Optional[RvsetCache]:
+    """Cache for the clone, sharing the base's immutable device state.
+
+    Repairs rebind ``bl_frontier``/``closure``/... functionally and
+    ``refresh_device_arrays`` binds a new ``arrays`` dict, so sharing by
+    reference is safe; the two dicts are copied because repairs mutate
+    them in place (``arrays[k] = ...`` via the new-dict rebind is safe,
+    but ``rpq_closures`` is cleared/LRU'd in place by ``product_closure``
+    and the refresh)."""
+    if base is None:
+        return None
+    return RvsetCache(
+        fr=clone_fr, arrays=dict(base.arrays),
+        bl_frontier=base.bl_frontier, closure=base.closure,
+        part_b=base.part_b, bl_dist=base.bl_dist,
+        dist_closure=base.dist_closure,
+        rpq_closures=dict(base.rpq_closures),
+        version=base.version, repair_debt=base.repair_debt)
+
+
+def cow_clone(fr: Fragmentation, delta: GraphDelta) -> Fragmentation:
+    """Copy-on-write clone of ``fr`` that ``delta`` can be applied to
+    without the base ever observing a change.
+
+    Copied: the delta-touched ``arrays`` (see :func:`touched_array_names`)
+    and every host bookkeeping array ``apply_delta`` mutates in place
+    (``b_index``, ``frag_sizes``, ``n_edges``, ``src_fill``, ``stubs``,
+    ``_slot_of``).  Shared by reference: the graph, partition, untouched
+    arrays, and fields that are only ever *rebound* (``bnodes`` grows via
+    ``np.append`` — a fresh array — and ``g`` is replaced wholesale).
+
+    ``dataclasses.replace`` (not ``copy.copy``) so the clone's ``__dict__``
+    carries dataclass fields only — memoized default sessions and sharded
+    device uploads stay with the base and rebuild lazily against the
+    clone."""
+    touched = touched_array_names(fr, delta)
+    arrays = {k: (v.copy() if k in touched else v)
+              for k, v in fr.arrays.items()}
+    clone = dataclasses.replace(
+        fr, arrays=arrays,
+        b_index=fr.b_index.copy(),
+        frag_sizes=fr.frag_sizes.copy(),
+        rvset_cache=None,
+        _slot_of=None if fr._slot_of is None else fr._slot_of.copy(),
+        n_edges=None if fr.n_edges is None else fr.n_edges.copy(),
+        src_fill=None if fr.src_fill is None else fr.src_fill.copy(),
+        stubs=None if fr.stubs is None else [dict(s) for s in fr.stubs])
+    clone.rvset_cache = _clone_cache(clone, fr.rvset_cache)
+    return clone
+
+
+@dataclasses.dataclass
+class Version:
+    """One published immutable snapshot.  ``pins`` counts in-flight readers
+    (query chunks running against this version); the store never reclaims
+    a pinned version."""
+
+    vid: int
+    fr: Fragmentation
+    pins: int = 0
+    retired: bool = False     # dropped/superseded; reclaimed when unpinned
+
+    @property
+    def cache_version(self) -> Optional[int]:
+        """Snapshot id results computed against this version carry."""
+        c = self.fr.rvset_cache
+        return None if c is None else c.version
+
+
+class VersionedCacheStore:
+    """Keeps the last few versions live over one :class:`QuerySession`.
+
+    * :meth:`acquire_head` / :meth:`release` pin a reader to the head
+      snapshot for the duration of one batch;
+    * :meth:`commit_delta` clones the head copy-on-write, repairs the
+      clone concurrently with readers (session lock held only during the
+      clone), and publishes it as the new head — or drops it on failure;
+    * :meth:`drop` retires a version explicitly (operator rollback);
+    * capacity eviction reclaims the oldest **unpinned, non-head**
+      versions beyond ``capacity`` — pinned versions persist until their
+      readers drain, so the store can transiently exceed capacity.
+
+    Commits are serialized by ``_repair_lock`` (deltas are ordered);
+    bookkeeping is protected by ``_lock``.  Lock order is always
+    ``_repair_lock -> session._lock (briefly) -> _lock``, and readers take
+    only ``session._lock``, so the store adds no deadlock edge.
+    """
+
+    def __init__(self, session, capacity: int = 4):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.session = session
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._repair_lock = threading.Lock()
+        self._versions: "OrderedDict[int, Version]" = OrderedDict()
+        self._versions[0] = Version(0, session.fr)
+        self._head_vid = 0
+        self._next_vid = 1
+        self.committed = 0       # deltas published as new versions
+        self.dropped = 0         # versions dropped (failed repair + drop())
+        self.evicted = 0         # unpinned versions reclaimed by capacity
+
+    # -- readers ------------------------------------------------------------
+
+    def head(self) -> Version:
+        with self._lock:
+            return self._versions[self._head_vid]
+
+    def acquire_head(self) -> Version:
+        """Pin the head snapshot for one reader; pair with :meth:`release`."""
+        with self._lock:
+            ver = self._versions[self._head_vid]
+            ver.pins += 1
+            return ver
+
+    def release(self, ver: Version) -> None:
+        with self._lock:
+            ver.pins -= 1
+            assert ver.pins >= 0, f"over-released version {ver.vid}"
+            self._reclaim()
+
+    def live(self):
+        """The currently live (non-retired) versions, oldest first."""
+        with self._lock:
+            return [v for v in self._versions.values() if not v.retired]
+
+    # -- writers ------------------------------------------------------------
+
+    def commit_delta(self, delta: GraphDelta
+                     ) -> Tuple[Version, incremental.UpdateStats]:
+        """Apply ``delta`` as a new version and publish it as head.
+
+        The head is pinned while its clone is cut and repaired; the
+        session lock is held only for the clone (a few small-array
+        memcpys), so concurrent readers wait at most that long and
+        **never** for the repair itself.  A failed repair raises
+        :class:`~repro.errors.DeltaApplyFailed` and leaves the head
+        untouched — the clone is simply dropped, no restore needed."""
+        with self._repair_lock:
+            base = self.acquire_head()
+            try:
+                if delta.is_empty():
+                    return base, incremental.UpdateStats(mode="noop")
+                with self.session._lock:
+                    work_fr = cow_clone(base.fr, delta)
+                try:
+                    stats = self.session.repair_on(work_fr, delta)
+                except Exception as exc:
+                    with self._lock:
+                        self.dropped += 1
+                    self.session.stats.rollbacks += 1
+                    raise DeltaApplyFailed(exc) from exc
+                with self._lock:
+                    ver = Version(self._next_vid, work_fr)
+                    self._next_vid += 1
+                    self._versions[ver.vid] = ver
+                    self._head_vid = ver.vid
+                    self.committed += 1
+                    self._reclaim()
+                return ver, stats
+            finally:
+                self.release(base)
+
+    def drop(self, vid: int) -> None:
+        """Retire version ``vid`` (rollback-as-drop).  Pinned readers keep
+        their snapshot until they release it; if the head is dropped, the
+        newest remaining live version becomes head.  The last live version
+        cannot be dropped — something must serve reads."""
+        with self._lock:
+            ver = self._versions.get(vid)
+            if ver is None or ver.retired:
+                raise KeyError(f"no live version {vid}")
+            live = [v for v in self._versions.values() if not v.retired]
+            if len(live) == 1:
+                raise ValueError(
+                    f"cannot drop version {vid}: it is the last live "
+                    "version (reads must have a head to pin)")
+            ver.retired = True
+            self.dropped += 1
+            if vid == self._head_vid:
+                for v in reversed(self._versions.values()):
+                    if not v.retired:
+                        self._head_vid = v.vid
+                        break
+            self._reclaim()
+
+    def _reclaim(self) -> None:
+        """(lock held) Delete retired versions whose readers drained, then
+        evict the oldest unpinned non-head versions beyond capacity."""
+        for vid in [v.vid for v in self._versions.values()
+                    if v.retired and v.pins == 0]:
+            del self._versions[vid]
+        while len(self._versions) > self.capacity:
+            victim = next((v for v in self._versions.values()
+                           if v.vid != self._head_vid and v.pins == 0), None)
+            if victim is None:
+                break       # everything pinned: over capacity until drained
+            del self._versions[victim.vid]
+            self.evicted += 1
+
+    # -- observability ------------------------------------------------------
+
+    def gauges(self) -> dict:
+        """Live MVCC gauges for :meth:`QueryServer.telemetry`."""
+        with self._lock:
+            return dict(
+                live_versions=len(self._versions),
+                head_vid=self._head_vid,
+                pinned_readers={v.vid: v.pins
+                                for v in self._versions.values() if v.pins},
+                versions_committed=self.committed,
+                versions_dropped=self.dropped,
+                versions_evicted=self.evicted)

@@ -19,6 +19,10 @@ Public surface (everything here is re-exported at this level):
   shared with session results and the error taxonomy.
 * :class:`RetryPolicy` — capped exponential backoff for transient
   serving failures.
+* :class:`Version` / :class:`VersionedCacheStore` — the MVCC snapshot
+  store behind ``QueryServer(..., mvcc=True)``: immutable copy-on-write
+  versions, pinned readers, concurrent repair, rollback-as-drop
+  (:mod:`repro.core.versions`, DESIGN.md Sec. 9).
 * :class:`Telemetry` — sliding-window p50/p95/p99 per route, qps, batch
   occupancy, lane depths (``QueryServer.telemetry()`` snapshots it).
 * :class:`AdmissionPolicy` / :func:`estimate_cost` and the lane
@@ -30,6 +34,7 @@ Public surface (everything here is re-exported at this level):
 * :class:`Request` / :class:`ServeEngine` — the unrelated toy LM decode
   loop (:mod:`repro.serve.lm`), kept at its historical import path.
 """
+from ..core.versions import Version, VersionedCacheStore
 from ..errors import (DeadLetterError, DeadlineExceeded, DeltaApplyFailed,
                       InjectedFault, QueryTooExpensive, ServingError,
                       Status)
@@ -47,6 +52,7 @@ __all__ = [
     "QueryServer", "AsyncQueryEngine",
     "QueryFuture", "UpdateFuture", "QueryRequest", "UpdateRequest",
     "Status", "RetryPolicy", "Telemetry", "VALID_KINDS",
+    "Version", "VersionedCacheStore",
     "AdmissionPolicy", "estimate_cost",
     "GREEN", "YELLOW", "RED", "LANES",
     "FaultInjector", "FaultSpec", "SITES",

@@ -17,6 +17,13 @@ Scheduling model:
   against the pre-delta ``cache_version``), and queries submitted after
   it wait behind it.  Fencing is therefore structural — no timestamps,
   no read locks on the cache.
+* **MVCC mode** (constructed with a
+  :class:`~repro.core.versions.VersionedCacheStore`) removes the barrier
+  entirely: deltas route to a dedicated repair worker thread that
+  commits each as a new copy-on-write version while query chunks keep
+  forming and executing against the pinned head snapshot — the queue
+  stays one segment, reads never wait for a repair, and a delta becomes
+  visible exactly when its version publishes (DESIGN.md Sec. 9).
 * Within a segment, requests sit in their admission lane (GREEN first,
   then YELLOW, PR-7 semantics).  A chunk ships when the lane holds a full
   batch, a barrier or flush is pending behind it, the oldest deadline in
@@ -206,7 +213,9 @@ class AsyncQueryEngine:
                  sleep: Callable[[float], None] = time.sleep,
                  ship_margin_s: float = 0.025,
                  batch_wait_s: float = 0.002,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 store=None,
+                 dead_letter_cap: Optional[int] = 256):
         assert batch_size > 0
         self.session = session
         self.batch_size = batch_size
@@ -216,6 +225,10 @@ class AsyncQueryEngine:
         self.ship_margin = ship_margin_s
         self.batch_wait = batch_wait_s
         self.telemetry = telemetry or Telemetry()
+        # MVCC mode: a core.versions.VersionedCacheStore over this session.
+        # Deltas then bypass the barrier queue and commit concurrently on
+        # the repair worker while chunks serve against the pinned head.
+        self.store = store
         # _mutex guards the queue/counters; it is reentrant because batch
         # formation (under the condition) resolves expired futures inline
         self._mutex = threading.RLock()
@@ -226,10 +239,21 @@ class AsyncQueryEngine:
         self._resolved_seq = 0
         self._stop = False
         self._thread: Optional[threading.Thread] = None
+        # MVCC repair lane: pending deltas + the worker draining them
+        self._repairs: collections.deque = collections.deque()
+        self._repair_cond = threading.Condition(self._mutex)
+        self._repair_thread: Optional[threading.Thread] = None
         # one executor at a time: either the scheduler thread or an
-        # inline flush, never both
+        # inline flush, never both (the repair worker is deliberately
+        # OUTSIDE this mutex — repairs must overlap query serving)
         self._serve_mutex = threading.Lock()
-        self.dead_letters: List[QueryFuture] = []
+        # dead letters keep only the newest ``dead_letter_cap`` poison
+        # requests (None = unbounded) so sustained poison traffic cannot
+        # grow memory without limit; evictions are counted, not silent
+        self.dead_letter_cap = dead_letter_cap
+        self.dead_letters: collections.deque = collections.deque(
+            maxlen=dead_letter_cap)
+        self.dead_letters_evicted = 0
         self.batches_run = 0
         self.updates_applied = 0
         self.updates_failed = 0
@@ -253,12 +277,18 @@ class AsyncQueryEngine:
         return fut
 
     def submit_update(self, fut: UpdateFuture) -> UpdateFuture:
-        """Enqueue a graph delta as a snapshot barrier."""
+        """Enqueue a graph delta — a snapshot barrier in the default mode,
+        a concurrent repair-lane entry in MVCC mode (the query queue stays
+        one segment and never fences)."""
         with self._work:
             if self._stop:
                 raise RuntimeError("engine is stopped; no new submissions")
             fut.submitted_at = self._clock()
-            self._queue.append(fut)
+            if self.store is not None:
+                self._repairs.append(fut)
+                self._repair_cond.notify_all()
+            else:
+                self._queue.append(fut)
             self._work.notify_all()
         return fut
 
@@ -267,7 +297,7 @@ class AsyncQueryEngine:
         with self._mutex:
             queued = sum(e.depth() if isinstance(e, _Segment) else 1
                          for e in self._queue)
-            return queued + len(self._in_flight)
+            return queued + len(self._repairs) + len(self._in_flight)
 
     def depths(self) -> Dict[str, int]:
         """Live per-lane queue depths plus pending update count."""
@@ -279,7 +309,19 @@ class AsyncQueryEngine:
                         out[lane] += len(q)
                 else:
                     out["updates"] += 1
+            out["updates"] += len(self._repairs)
             return out
+
+    def mvcc_gauges(self) -> Optional[Dict[str, object]]:
+        """Live MVCC observability (None outside MVCC mode): the store's
+        version/pin/drop gauges plus the repair-lane depth."""
+        if self.store is None:
+            return None
+        gauges = self.store.gauges()
+        with self._mutex:
+            gauges["repair_queue_depth"] = len(self._repairs) + sum(
+                1 for f in self._in_flight if isinstance(f, UpdateFuture))
+        return gauges
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -289,7 +331,8 @@ class AsyncQueryEngine:
         return t is not None and t.is_alive()
 
     def start(self) -> "AsyncQueryEngine":
-        """Spawn the background scheduler thread (idempotent)."""
+        """Spawn the background scheduler thread (idempotent), plus the
+        dedicated repair worker in MVCC mode."""
         with self._mutex:
             if self.running:
                 return self
@@ -297,21 +340,28 @@ class AsyncQueryEngine:
             self._thread = threading.Thread(
                 target=self._loop, name="repro-query-scheduler", daemon=True)
             self._thread.start()
+            if self.store is not None:
+                self._repair_thread = threading.Thread(
+                    target=self._repair_loop, name="repro-repair-worker",
+                    daemon=True)
+                self._repair_thread.start()
         return self
 
     def stop(self, drain: bool = True) -> None:
-        """Stop the scheduler.  ``drain=True`` (default) serves everything
-        already queued first; ``drain=False`` abandons pending futures
-        (they stay unresolved forever)."""
+        """Stop the scheduler (and repair worker).  ``drain=True``
+        (default) serves everything already queued first; ``drain=False``
+        abandons pending futures (they stay unresolved forever)."""
         if drain:
             self.flush()
         with self._work:
             self._stop = True
             self._work.notify_all()
-        t = self._thread
-        if t is not None and t is not threading.current_thread():
-            t.join(timeout=self.JOIN_TIMEOUT_S)
+            self._repair_cond.notify_all()
+        for t in (self._thread, self._repair_thread):
+            if t is not None and t is not threading.current_thread():
+                t.join(timeout=self.JOIN_TIMEOUT_S)
         self._thread = None
+        self._repair_thread = None
 
     # -- synchronous barrier ----------------------------------------------
 
@@ -348,6 +398,7 @@ class AsyncQueryEngine:
                     out.extend(q)
             else:
                 out.append(e)
+        out.extend(self._repairs)
         out.extend(f for f in self._in_flight if not f.done())
         return out
 
@@ -377,9 +428,27 @@ class AsyncQueryEngine:
 
     def _execute(self, work) -> None:
         if isinstance(work, UpdateFuture):
-            self._apply_update(work)
+            if self.store is not None:
+                self._apply_update_mvcc(work)
+            else:
+                self._apply_update(work)
         else:
             self._serve_chunk(work)
+
+    def _repair_loop(self) -> None:
+        """MVCC repair worker: commit pending deltas as new versions,
+        concurrently with the scheduler's query serving (no _serve_mutex —
+        that exclusion is exactly what MVCC removes)."""
+        while True:
+            with self._repair_cond:
+                while not self._repairs and not self._stop:
+                    self._repair_cond.wait()
+                if self._stop:
+                    return    # drain=True flushed first; else abandon, like
+                    #           the scheduler does with its queue
+                fut = self._repairs.popleft()
+                self._in_flight.append(fut)
+            self._apply_update_mvcc(fut)
 
     def _next_work(self):
         """Block until a chunk or barrier is ready to execute; None on
@@ -399,9 +468,18 @@ class AsyncQueryEngine:
 
     def _next_work_nowait(self):
         """Non-blocking variant for inline flush (flush flag is set, so
-        any non-empty lane forms a chunk)."""
+        any non-empty lane forms a chunk).  Pending MVCC repairs drain
+        *after* the queued chunks — the deterministic analogue of the live
+        ordering, where already-formed chunks answer the pre-delta head."""
         with self._mutex:
-            return self._pop_ready()
+            work = self._pop_ready()
+            if work is not None:
+                return work
+            if self._repairs:
+                fut = self._repairs.popleft()
+                self._in_flight.append(fut)
+                return fut
+            return None
 
     def _head_segment(self) -> Optional[_Segment]:
         """Drop exhausted leading segments; return the head segment (or
@@ -537,6 +615,9 @@ class AsyncQueryEngine:
         if len(reqs) == 1:
             r = reqs[0]
             r.error = DeadLetterError(r.attempts, last)
+            if (self.dead_letter_cap is not None
+                    and len(self.dead_letters) >= self.dead_letter_cap):
+                self.dead_letters_evicted += 1   # deque drops the oldest
             self.dead_letters.append(r)
             self._resolve(r, Status.DEAD_LETTER)
             return
@@ -546,8 +627,20 @@ class AsyncQueryEngine:
 
     def _serve_batch(self, reqs: List[QueryFuture]) -> None:
         """ONE session.run mixed batch; the planner fuses it into one
-        compiled execution per (kind, automaton) group."""
-        results = self.session.run([r.to_query() for r in reqs])
+        compiled execution per (kind, automaton) group.  In MVCC mode the
+        batch pins the head snapshot for its whole run — a concurrently
+        publishing repair never moves the ground under it, and the pinned
+        version cannot be evicted until the batch releases it (per-attempt
+        re-pinning under retries is sound: head reads are monotonic)."""
+        if self.store is not None:
+            ver = self.store.acquire_head()
+            try:
+                results = self.session.run([r.to_query() for r in reqs],
+                                           version=ver)
+            finally:
+                self.store.release(ver)
+        else:
+            results = self.session.run([r.to_query() for r in reqs])
         for r, res in zip(reqs, results):
             r.value = res.distance if r.kind == "dist" else res.answer
             r.cache_version = res.cache_version
@@ -562,6 +655,21 @@ class AsyncQueryEngine:
         requests queued behind it."""
         try:
             fut.value = self.session.apply(fut.delta)
+        except DeltaApplyFailed as exc:
+            fut.error = exc
+            self.updates_failed += 1
+            self._resolve(fut, Status.FAILED)
+            return
+        self.updates_applied += 1
+        self._resolve(fut, Status.APPLIED)
+
+    def _apply_update_mvcc(self, fut: UpdateFuture) -> None:
+        """Commit one delta as a new MVCC version.  On failure the clone
+        is dropped and the head keeps serving — no rollback, no pause;
+        the failure resolves the future ``FAILED`` like the barrier
+        path."""
+        try:
+            _ver, fut.value = self.store.commit_delta(fut.delta)
         except DeltaApplyFailed as exc:
             fut.error = exc
             self.updates_failed += 1

@@ -81,7 +81,10 @@ class QueryServer:
                  ship_margin_ms: float = 25.0,
                  batch_wait_ms: float = 2.0,
                  start: bool = True,
-                 telemetry_window: int = 2048):
+                 telemetry_window: int = 2048,
+                 mvcc: bool = False,
+                 versions: int = 4,
+                 dead_letter_cap: Optional[int] = 256):
         """``with_dist=True`` eagerly builds the tropical cache too; the
         default leaves it to build lazily on the first dist/bounded query,
         so reach-only servers never pay for it.  Pass an existing
@@ -100,7 +103,18 @@ class QueryServer:
         batchmates before shipping anyway (the latency/occupancy knob).
 
         ``start=False`` skips the scheduler thread: requests defer until
-        :meth:`flush` (deterministic mode)."""
+        :meth:`flush` (deterministic mode).
+
+        ``mvcc=True`` serves reads from an MVCC snapshot store
+        (:class:`~repro.core.versions.VersionedCacheStore`, keeping up to
+        ``versions`` snapshots live): deltas commit as copy-on-write
+        versions on a dedicated repair worker while query chunks keep
+        running against the pinned head — no scheduler barriers, reads
+        never wait for a repair (DESIGN.md Sec. 9).  The default
+        (``False``) keeps the PR-8 barrier semantics, where a delta
+        fences the queue.  ``dead_letter_cap`` bounds the retained
+        dead-letter list (oldest evicted and counted; ``None`` =
+        unbounded)."""
         assert batch_size > 0
         self.fr = fr
         self.with_dist = with_dist
@@ -110,14 +124,20 @@ class QueryServer:
         self.admission = admission or AdmissionPolicy.for_fragmentation(fr)
         self._clock = clock
         self.rejected = 0         # RED-lane submissions refused
+        if warm:
+            self.session.warm(with_dist=with_dist)
+        self.store = None
+        if mvcc:
+            from ..core.versions import VersionedCacheStore
+            self.store = VersionedCacheStore(self.session,
+                                             capacity=versions)
         self.engine = AsyncQueryEngine(
             self.session, batch_size=batch_size,
             retry=retry or RetryPolicy(), clock=clock, sleep=sleep,
             ship_margin_s=ship_margin_ms / 1e3,
             batch_wait_s=batch_wait_ms / 1e3,
-            telemetry=Telemetry(window=telemetry_window))
-        if warm:
-            self.session.warm(with_dist=with_dist)
+            telemetry=Telemetry(window=telemetry_window),
+            store=self.store, dead_letter_cap=dead_letter_cap)
         if start:
             self.engine.start()
 
@@ -174,7 +194,10 @@ class QueryServer:
             if qa is None:
                 qa = self.session._resolve_automaton(Rpq(s, t, regex=regex))
             states = qa.n_states
-            c = self.fr.rvset_cache
+            # price against the cache the query will actually run on: the
+            # head version's in MVCC mode, the shared one otherwise
+            fr = self.store.head().fr if self.store is not None else self.fr
+            c = fr.rvset_cache
             cached = c is not None and qa.cache_key() in c.rpq_closures
         cost = estimate_cost(self.fr, kind, states=states,
                              closure_cached=cached)
@@ -187,11 +210,18 @@ class QueryServer:
 
     def submit_delta(self, delta: GraphDelta) -> UpdateFuture:
         """Enqueue a graph update; returns its :class:`~repro.serve
-        .engine.UpdateFuture` immediately.  The delta is a snapshot
-        barrier: queries submitted before it are served against the
-        pre-delta cache, queries after it wait for the repaired cache
-        (or, if the delta fails and rolls back, resume against the
-        unchanged pre-delta cache)."""
+        .engine.UpdateFuture` immediately.
+
+        Default mode: the delta is a snapshot barrier — queries submitted
+        before it are served against the pre-delta cache, queries after
+        it wait for the repaired cache (or, if the delta fails and rolls
+        back, resume against the unchanged pre-delta cache).
+
+        MVCC mode (``mvcc=True``): the delta repairs **concurrently** on
+        the repair worker and never fences the queue; it becomes visible
+        to new batches exactly when its version publishes (the commit
+        point is ``future.result()``), and a failed delta is dropped
+        while the head keeps serving."""
         return self.engine.submit_update(UpdateFuture(delta))
 
     def pending(self) -> int:
@@ -238,9 +268,13 @@ class QueryServer:
     def telemetry(self) -> dict:
         """Live serving dashboard: p50/p95/p99 latency per route
         (kind/lane), queries/sec, batch occupancy, lane depths, status
-        counts (see :class:`~repro.serve.telemetry.Telemetry`)."""
+        counts (see :class:`~repro.serve.telemetry.Telemetry`); in MVCC
+        mode also an ``"mvcc"`` gauge block — live version count, pinned
+        readers per version, repair-queue depth, versions
+        committed/dropped/evicted."""
         return self.engine.telemetry.snapshot(
-            lane_depths=self.engine.depths())
+            lane_depths=self.engine.depths(),
+            gauges=self.engine.mvcc_gauges())
 
     @property
     def batch_size(self) -> int:
@@ -248,7 +282,14 @@ class QueryServer:
 
     @property
     def dead_letters(self) -> List[QueryFuture]:
-        return self.engine.dead_letters
+        """Retained dead-lettered requests, oldest first (a list copy of
+        the engine's capped buffer — at most ``dead_letter_cap``)."""
+        return list(self.engine.dead_letters)
+
+    @property
+    def dead_letters_evicted(self) -> int:
+        """Dead-lettered requests dropped by the retention cap."""
+        return self.engine.dead_letters_evicted
 
     @property
     def batches_run(self) -> int:

@@ -77,8 +77,14 @@ class Telemetry:
 
     # -- readers -----------------------------------------------------------
 
-    def snapshot(self, lane_depths: Optional[Dict[str, int]] = None) -> Dict:
-        """One coherent dashboard sample (plain dict, json-serializable)."""
+    def snapshot(self, lane_depths: Optional[Dict[str, int]] = None,
+                 gauges: Optional[Dict] = None) -> Dict:
+        """One coherent dashboard sample (plain dict, json-serializable).
+
+        ``gauges``: live MVCC gauges from
+        :meth:`AsyncQueryEngine.mvcc_gauges` (version/pin/repair-queue
+        state) — included under ``"mvcc"`` when the server runs in MVCC
+        mode, absent otherwise."""
         with self._lock:
             routes = {}
             for route, lane in self._latency.items():
@@ -99,7 +105,7 @@ class Telemetry:
                              / len(self._batches))
             else:
                 occupancy = 0.0
-            return {
+            out = {
                 "resolved": self.resolved,
                 "qps": qps,
                 "batches": len(self._batches),
@@ -108,3 +114,6 @@ class Telemetry:
                 "routes": routes,
                 "statuses": dict(self.status_counts),
             }
+            if gauges is not None:
+                out["mvcc"] = dict(gauges)
+            return out

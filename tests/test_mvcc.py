@@ -1,0 +1,459 @@
+"""MVCC snapshot store: non-blocking deltas, versioned rvset caches,
+concurrent repair (DESIGN.md Sec. 9).
+
+The contracts under test:
+
+* ``commit_delta`` publishes a new head without the base version ever
+  observing a change — a reader pinned to the old snapshot keeps getting
+  pre-delta oracle answers after the commit;
+* rollback is **drop**: a failed repair (or an explicit ``drop``) retires
+  the version while pinned readers keep their snapshot, and the head
+  keeps serving — no restore, no pause;
+* capacity eviction reclaims only unpinned non-head versions; pinned
+  versions persist past capacity until their readers drain;
+* the engine in MVCC mode never blocks a query on an in-progress repair
+  (measured against an injected slow repair), keeps the deterministic
+  inline ordering in deferred mode (queued queries answer the pre-delta
+  head), and surfaces the version/pin/repair gauges through telemetry;
+* the sharded path serves a chunk pinned to a pre-delta version with
+  pre-delta oracle answers while the delta commits, and the
+  one-collective-per-fused-group HLO guarantee holds on **every** live
+  version (subprocess over 8 fake devices).
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import GraphDelta, Reach, fragment_graph
+from repro.core.versions import VersionedCacheStore, cow_clone
+from repro.errors import DeltaApplyFailed, Status
+from repro.graph import erdos_renyi, random_partition
+from repro.serve import FaultInjector, FaultSpec, QueryServer, RetryPolicy
+
+from oracles import oracle_reach
+
+pytestmark = pytest.mark.mvcc
+
+RESULT_TIMEOUT_S = 120.0
+
+
+def _case(n=24, m=40, k=3, seed=11, **kw):
+    kw.setdefault("reserve_boundary", 12)
+    kw.setdefault("reserve_edges", 24)
+    kw.setdefault("reserve_stubs", 12)
+    g = erdos_renyi(n, m, n_labels=3, seed=seed)
+    fr = fragment_graph(g, random_partition(g, k, seed), k, **kw)
+    return g, fr
+
+
+def _unreachable_pair(g, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(500):
+        s, t = int(rng.integers(g.n)), int(rng.integers(g.n))
+        if s != t and not oracle_reach(g, s, t):
+            return s, t
+    pytest.skip("graph is (almost) strongly connected")
+
+
+def _store(fr, capacity=4):
+    sess = repro.connect(fr).warm()
+    return sess, VersionedCacheStore(sess, capacity=capacity)
+
+
+def _pin(store, ver):
+    """Pin an arbitrary (possibly non-head) version, like an in-flight
+    reader that acquired it before newer versions published."""
+    with store._lock:
+        ver.pins += 1
+    return ver
+
+
+# ---------------------------------------------------------------------------
+# store semantics: commit, pinned readers, drop, eviction
+# ---------------------------------------------------------------------------
+
+def test_commit_publishes_new_head_base_untouched():
+    g, fr = _case()
+    s, t = _unreachable_pair(g)
+    sess, store = _store(fr)
+    old = store.acquire_head()
+    g0, av0, cv0 = fr.g, fr.arrays_version, fr.rvset_cache.version
+
+    ver, stats = store.commit_delta(GraphDelta.insert([(s, t)]))
+    assert stats.mode in ("repair", "recompute")
+    assert store.head() is ver and ver.vid == 1
+    assert store.committed == 1
+    # the base version never observed the delta: same graph object, same
+    # array/cache versions, and the pinned reader still answers pre-delta
+    assert fr.g is g0 and fr.arrays_version == av0
+    assert fr.rvset_cache.version == cv0
+    assert ver.fr.g is not g0 and ver.cache_version == cv0 + 1
+    r_old = sess.run([Reach(s, t)], version=old)[0]
+    r_new = sess.run([Reach(s, t)], version=ver)[0]
+    assert r_old.answer is False and r_old.cache_version == cv0
+    assert r_new.answer is True and r_new.cache_version == cv0 + 1
+    store.release(old)
+
+
+def test_empty_delta_is_noop_version():
+    _, fr = _case(16, 30, 2, seed=3)
+    _, store = _store(fr)
+    ver, stats = store.commit_delta(GraphDelta())
+    assert stats.mode == "noop"
+    assert ver is store.head() and ver.vid == 0
+    assert store.committed == 0
+
+
+def test_drop_non_head_keeps_pinned_reader_snapshot():
+    g, fr = _case(seed=5)
+    sess, store = _store(fr)
+    rng = np.random.default_rng(1)
+    for _ in range(2):
+        store.commit_delta(GraphDelta.insert(
+            [(int(rng.integers(g.n)), int(rng.integers(g.n)))]))
+    v0, v1, v2 = store.live()
+    _pin(store, v1)                     # reader holding the middle version
+
+    store.drop(v1.vid)                  # non-head rollback
+    assert store.head() is v2           # head unmoved
+    assert v1.retired and store.dropped == 1
+    assert v1.vid in store._versions    # pinned: not reclaimed yet
+    # the pinned reader still runs against its retired snapshot
+    r = sess.run([Reach(0, 1)], version=v1)[0]
+    assert r.cache_version == v1.cache_version
+    store.release(v1)
+    assert v1.vid not in store._versions    # reclaimed once unpinned
+
+    # dropping the head falls back to the newest remaining live version
+    store.drop(v2.vid)
+    assert store.head() is v0
+    with pytest.raises(ValueError, match="last live"):
+        store.drop(v0.vid)
+    with pytest.raises(KeyError):
+        store.drop(v1.vid)              # already gone
+
+
+def test_capacity_evicts_only_unpinned_nonhead():
+    g, fr = _case(seed=7)
+    _, store = _store(fr, capacity=2)
+    pinned = store.acquire_head()       # v0 pinned by an in-flight reader
+    rng = np.random.default_rng(2)
+    for _ in range(3):
+        store.commit_delta(GraphDelta.insert(
+            [(int(rng.integers(g.n)), int(rng.integers(g.n)))]))
+    # v1 and v2 (unpinned, non-head) were evicted; pinned v0 persists
+    # beyond capacity alongside the head
+    assert [v.vid for v in store.live()] == [0, 3]
+    assert store.evicted == 2
+    assert len(store._versions) == 2    # transiently ok: pinned + head
+    store.release(pinned)
+    assert [v.vid for v in store.live()] == [0, 3]
+    gauges = store.gauges()
+    assert gauges["head_vid"] == 3
+    assert gauges["versions_evicted"] == 2
+    assert gauges["pinned_readers"] == {}
+
+
+def test_failed_repair_drops_clone_head_keeps_serving():
+    g, fr = _case(seed=9)
+    s, t = _unreachable_pair(g)
+    chaos = FaultInjector(
+        seed=0, rates={"delta.repair": FaultSpec(rate=1.0, max_failures=1)})
+    sess = repro.connect(fr, chaos=chaos).warm()
+    store = VersionedCacheStore(sess)
+    cv0 = fr.rvset_cache.version
+    with pytest.raises(DeltaApplyFailed):
+        store.commit_delta(GraphDelta.insert([(s, t)]))
+    assert store.head().vid == 0 and store.dropped == 1
+    assert store.committed == 0 and sess.stats.rollbacks == 1
+    # head never touched: no restore happened, same cache version, and
+    # reads still answer the pre-delta graph
+    assert fr.g is g and fr.rvset_cache.version == cv0
+    assert sess.run([Reach(s, t)], version=store.head())[0].answer is False
+    # after the fault schedule heals, the same delta commits
+    ver, stats = store.commit_delta(GraphDelta.insert([(s, t)]))
+    assert store.head() is ver and stats.mode in ("repair", "recompute")
+    assert sess.run([Reach(s, t)], version=ver)[0].answer is True
+
+
+def test_cow_clone_shares_untouched_copies_touched():
+    g, fr = _case(seed=13)
+    repro.connect(fr).warm()
+    u = int(np.nonzero(fr.part == 0)[0][0])
+    w = int(np.nonzero(fr.part == 1)[0][0])
+    clone = cow_clone(fr, GraphDelta.insert([(u, w)]))      # cross edge
+    assert clone.arrays["esrc"] is not fr.arrays["esrc"]
+    assert clone.arrays["src_local"] is not fr.arrays["src_local"]
+    assert clone.arrays["src_row"] is not fr.arrays["src_row"]
+    # never-touched state shares buffers; mutated bookkeeping is copied
+    assert clone.g is fr.g and clone.part is fr.part
+    assert clone.b_index is not fr.b_index
+    assert clone.rvset_cache is not fr.rvset_cache
+    assert clone.rvset_cache.arrays is not fr.rvset_cache.arrays
+    assert clone.rvset_cache.closure is fr.rvset_cache.closure
+    # memoized device uploads / default sessions stay with the base
+    assert "_sharded_device_inputs" not in clone.__dict__
+    # an intra-fragment delta copies only the edge arrays
+    u2 = int(np.nonzero(fr.part == 0)[0][1])
+    intra = cow_clone(fr, GraphDelta.insert([(u, u2)]))
+    assert intra.arrays["src_local"] is fr.arrays["src_local"]
+
+
+def test_store_capacity_validation():
+    _, fr = _case(12, 20, 2, seed=1)
+    sess = repro.connect(fr)
+    with pytest.raises(ValueError, match="capacity"):
+        VersionedCacheStore(sess, capacity=0)
+
+
+# ---------------------------------------------------------------------------
+# engine integration (vmap): ordering, non-blocking reads, telemetry
+# ---------------------------------------------------------------------------
+
+def test_deferred_mvcc_queued_queries_answer_pre_delta_head():
+    g, fr = _case(24, 30, 3, seed=11)
+    s, t = _unreachable_pair(g)
+    srv = QueryServer(fr, batch_size=4, start=False, mvcc=True)
+    try:
+        pre = srv.submit(s, t)
+        upd = srv.submit_delta(GraphDelta.insert([(s, t)]))
+        mid = srv.submit(s, t)          # queued queries drain before the
+        srv.flush()                     # repair: both answer pre-delta
+        assert pre.value is False and mid.value is False
+        assert pre.cache_version == mid.cache_version
+        assert upd.status is Status.APPLIED
+        assert upd.value.mode in ("repair", "recompute")
+        # the committed version is visible to the next batch
+        post = srv.submit(s, t)
+        srv.flush()
+        assert post.value is True
+        assert post.cache_version == pre.cache_version + 1
+        assert srv.updates_applied == 1
+    finally:
+        srv.close()
+
+
+def test_live_mvcc_commit_point_and_monotonic_reads():
+    g, fr = _case(24, 30, 3, seed=17)
+    s, t = _unreachable_pair(g)
+    with QueryServer(fr, batch_size=4, batch_wait_ms=1.0, mvcc=True) as srv:
+        pre = srv.submit(s, t)
+        assert pre.result(timeout=RESULT_TIMEOUT_S) is False
+        upd = srv.submit_delta(GraphDelta.insert([(s, t)]))
+        upd.result(timeout=RESULT_TIMEOUT_S)    # the commit point
+        post = srv.submit(s, t)
+        assert post.result(timeout=RESULT_TIMEOUT_S) is True
+        assert post.cache_version > pre.cache_version
+        snap = srv.telemetry()
+        assert snap["mvcc"]["versions_committed"] == 1
+        assert snap["mvcc"]["head_vid"] == 1
+        assert snap["mvcc"]["repair_queue_depth"] == 0
+
+
+def test_queries_never_block_on_inflight_repair():
+    g, fr = _case(30, 60, 3, seed=19)
+    srv = QueryServer(fr, batch_size=4, batch_wait_ms=1.0, mvcc=True)
+    real_repair = srv.session.repair_on
+    try:
+        # pre-compile every reach bucket (1, 2, 4) so the timed reads
+        # below measure serving, not XLA compiles
+        for size in (1, 2, 4):
+            srv.session.run([Reach(0, 1)] * size)
+
+        entered = threading.Event()
+
+        def slow_repair(work_fr, delta):
+            entered.set()
+            time.sleep(3.0)             # a deliberately glacial repair
+            return real_repair(work_fr, delta)
+
+        srv.session.repair_on = slow_repair
+        upd = srv.submit_delta(GraphDelta.insert([(0, 1)]))
+        assert entered.wait(timeout=RESULT_TIMEOUT_S)
+        # reads submitted mid-repair complete long before the repair does
+        t0 = time.monotonic()
+        reads = [srv.submit(i, (i + 5) % g.n) for i in range(4)]
+        for r in reads:
+            r.result(timeout=RESULT_TIMEOUT_S)
+        read_s = time.monotonic() - t0
+        assert not upd.done()           # the repair is still in flight
+        assert read_s < 1.5, f"reads stalled {read_s:.2f}s behind a repair"
+        for r in reads:
+            assert r.value == oracle_reach(g, r.s, r.t)
+        upd.result(timeout=RESULT_TIMEOUT_S)
+        assert srv.updates_applied == 1
+    finally:
+        srv.session.repair_on = real_repair
+        srv.close()
+
+
+def test_failed_delta_resolves_failed_and_serving_continues():
+    g, fr = _case(seed=23)
+    s, t = _unreachable_pair(g)
+    chaos = FaultInjector(seed=0, rates={"delta.repair": 1.0})
+    srv = QueryServer(fr, batch_size=4, start=False, mvcc=True, chaos=chaos,
+                      retry=RetryPolicy(max_attempts=2, base_delay_ms=0.0))
+    try:
+        upd = srv.submit_delta(GraphDelta.insert([(s, t)]))
+        q = srv.submit(s, t)
+        srv.flush()
+        assert upd.status is Status.FAILED
+        with pytest.raises(DeltaApplyFailed):
+            upd.result(timeout=RESULT_TIMEOUT_S)
+        assert q.value is False         # head kept serving pre-delta
+        assert srv.updates_failed == 1
+        assert srv.telemetry()["mvcc"]["versions_dropped"] == 1
+    finally:
+        srv.close()
+
+
+def test_dead_letter_cap_evicts_oldest_and_counts():
+    _, fr = _case(20, 50, 2, seed=7)
+    poisons = [(0, 1), (2, 3), (4, 5)]
+    chaos = FaultInjector(seed=0, poison=poisons)
+    srv = QueryServer(fr, batch_size=4, start=False, chaos=chaos,
+                      dead_letter_cap=2,
+                      retry=RetryPolicy(max_attempts=2, base_delay_ms=0.0))
+    try:
+        futs = [srv.submit(s, t) for s, t in poisons]
+        srv.flush()
+        assert all(f.status is Status.DEAD_LETTER for f in futs)
+        assert srv.dead_letters == futs[1:]     # oldest evicted
+        assert srv.dead_letters_evicted == 1
+    finally:
+        srv.close()
+
+
+def test_telemetry_has_no_mvcc_block_outside_mvcc_mode():
+    _, fr = _case(12, 20, 2, seed=1)
+    srv = QueryServer(fr, batch_size=4, warm=False, start=False)
+    try:
+        assert "mvcc" not in srv.telemetry()
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend over 8 fake devices (subprocess, like test_session)
+# ---------------------------------------------------------------------------
+
+_MVCC_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, re, sys
+sys.path.insert(0, "__SRC__")
+sys.path.insert(0, "__TESTS__")
+import numpy as np
+import repro
+from repro.core import GraphDelta, Reach, fragment_graph
+from repro.core.distributed import lower_batch_hlo
+from repro.graph import erdos_renyi, random_partition
+from repro.serve import QueryServer
+from oracles import oracle_reach
+
+g = erdos_renyi(40, 120, n_labels=3, seed=7)
+fr = fragment_graph(g, random_partition(g, 8, 1), 8,
+                    reserve_boundary=12, reserve_edges=24, reserve_stubs=12)
+rng = np.random.default_rng(4)
+s = t = None
+for _ in range(500):
+    a, b = int(rng.integers(g.n)), int(rng.integers(g.n))
+    if a != b and not oracle_reach(g, a, b):
+        s, t = a, b
+        break
+
+srv = QueryServer(fr, batch_size=8, start=False, mvcc=True)
+backend = srv.session.backend
+pairs = [(int(rng.integers(g.n)), int(rng.integers(g.n))) for _ in range(7)]
+pre = [srv.submit(a, b) for a, b in pairs] + [srv.submit(s, t)]
+upd = srv.submit_delta(GraphDelta.insert([(s, t)]))
+post = [srv.submit(a, b) for a, b in pairs] + [srv.submit(s, t)]
+srv.flush()
+
+# deterministic inline ordering: every queued chunk answered the
+# pre-delta head even though a repair was pending behind it
+pre_ok = (all(r.value == oracle_reach(g, r.s, r.t) for r in pre + post)
+          and pre[-1].value is False and post[-1].value is False)
+stamps = {r.cache_version for r in pre + post}
+update_mode = upd.value.mode
+
+# the committed version is visible to the next batch; a reader still
+# pinned to the OLD version (an in-flight chunk when the delta landed)
+# keeps answering the pre-delta oracle
+store = srv.store
+old = next(v for v in store.live() if v.vid == 0)
+with store._lock:
+    old.pins += 1
+fresh = srv.submit(s, t)
+srv.flush()
+post_commit_ok = (fresh.value is True
+                  and fresh.cache_version == pre[-1].cache_version + 1)
+r_old = srv.session.run([Reach(s, t)], version=old)[0]
+pinned_old_ok = (r_old.answer is False
+                 and r_old.cache_version == pre[-1].cache_version)
+store.release(old)
+
+# one collective per fused group on EVERY live version's fragmentation
+COLL_RE = (r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|"
+           r"all_to_all|collective_permute)[a-z_]*")
+colls_per_version = []
+for ver in store.live():
+    hlo = lower_batch_hlo(ver.fr, pairs, "reach")
+    colls_per_version.append(len(re.findall(COLL_RE, hlo)))
+gauges = srv.telemetry()["mvcc"]
+srv.close()
+
+print(json.dumps({
+    "backend": backend,
+    "pre_ok": bool(pre_ok),
+    "one_stamp_pre": len(stamps) == 1,
+    "update_mode": update_mode,
+    "post_commit_ok": bool(post_commit_ok),
+    "pinned_old_ok": bool(pinned_old_ok),
+    "n_live": len(colls_per_version),
+    "colls_per_version": colls_per_version,
+    "committed": gauges["versions_committed"],
+}))
+"""
+
+
+@pytest.fixture(scope="module")
+def mvcc_shard_report():
+    here = os.path.dirname(__file__)
+    code = (_MVCC_SUBPROC
+            .replace("__SRC__",
+                     os.path.abspath(os.path.join(here, "..", "src")))
+            .replace("__TESTS__", os.path.abspath(here)))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_shard_map_mvcc_pinned_reader_and_commit_visibility(
+        mvcc_shard_report):
+    rep = mvcc_shard_report
+    assert rep["backend"] == "shard_map"
+    assert rep["pre_ok"], rep
+    assert rep["one_stamp_pre"], rep
+    assert rep["update_mode"] in ("repair_sharded", "repair", "recompute",
+                                  "rebuild"), rep
+    assert rep["post_commit_ok"], rep
+    assert rep["pinned_old_ok"], rep
+    assert rep["committed"] == 1, rep
+
+
+def test_shard_map_one_collective_on_every_live_version(mvcc_shard_report):
+    """The one-collective-per-fused-group HLO guarantee survives the COW
+    clone: both the pre-delta version and the repaired head lower to
+    exactly one collective per fused reach batch."""
+    rep = mvcc_shard_report
+    assert rep["n_live"] >= 2, rep
+    assert all(c == 1 for c in rep["colls_per_version"]), rep
