@@ -1,0 +1,39 @@
+"""repro.analysis: static guarantee verifier + concurrency lint
+(DESIGN.md Sec. 10).
+
+Three passes machine-check the paper's theorems and this repo's own
+hard-won invariants on every lowered program:
+
+* :mod:`.hlo_check` — parse the lowered HLO/StableHLO of the fused batch
+  programs into a structured model and verify exactly one collective per
+  group (Theorem 5.4's one visit per site), no collective inside a
+  ``while`` body, payload bits == ``Fragmentation.traffic_bits`` and no
+  ``|V|``/``|E|``-sized operand on the wire (Theorem 5.5).
+* :mod:`.lint` — AST lint for the bug classes previous PRs actually hit
+  (RPR001 ``jnp.asarray`` aliasing, RPR002 transfers under a lock,
+  RPR003 unseeded randomness/wall-clock on serving paths, RPR004
+  unbounded serving containers, RPR005 mutable state in cached
+  closures).
+* :mod:`.locks` — static lock-acquisition-graph extraction checked
+  against the declared partial order, plus a runtime-instrumented mode
+  used by the ``chaos``/``mvcc`` suites.
+
+Run everything: ``python -m repro.analysis --all [--out report.json]``.
+"""
+from .hlo_check import (COLLECTIVE_KINDS, CollectiveOp, ProgramModel,
+                        TensorType, check_program, parse_program,
+                        verify_fragmentation, verify_session, verify_store)
+from .lint import RULES, lint_paths, lint_source
+from .locks import (LOCK_ORDER, InstrumentedLock, LockMonitor,
+                    check_lock_order, extract_acquisition_graph, monitored)
+from .report import Violation, dump_report, make_report
+
+__all__ = [
+    "COLLECTIVE_KINDS", "CollectiveOp", "ProgramModel", "TensorType",
+    "parse_program", "check_program",
+    "verify_fragmentation", "verify_session", "verify_store",
+    "RULES", "lint_source", "lint_paths",
+    "LOCK_ORDER", "check_lock_order", "extract_acquisition_graph",
+    "LockMonitor", "InstrumentedLock", "monitored",
+    "Violation", "make_report", "dump_report",
+]

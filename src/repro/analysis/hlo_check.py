@@ -1,0 +1,495 @@
+"""HLO invariant checker: machine-check the paper's theorems on lowered
+programs (DESIGN.md Sec. 10.1).
+
+Parses the text of a lowered (StableHLO MLIR) or compiled (HLO dialect)
+program into a structured model — collective ops with operand/result
+dtypes and shapes, while-loop nesting (transitive through the call
+graph), async ``-start``/``-done`` pairs — and verifies, per program:
+
+* **HLO001** exactly one collective per fused group (Theorem 1: one
+  visit per site == one communication round);
+* **HLO002** no collective nested inside a ``while`` body, including
+  collectives hiding in functions *called* from a loop body (a loop
+  around the wire silently breaks the one-round bound);
+* **HLO003** collective payload bits exactly equal the
+  :meth:`Fragmentation.traffic_bits` wire model (closes the static
+  model vs. actual lowering loop);
+* **HLO004** no operand scaling with ``|V|`` or ``|E|`` crosses the wire
+  (Theorem 2: traffic independent of ``|G|``).
+
+This module owns the repo's ONE collective-matching pattern
+(:data:`COLLECTIVE_KINDS` / :data:`COLLECTIVE_RE`): ``launch.hlo_stats``
+and ``tests/test_guarantees.py`` both consume the structured parser
+instead of keeping private regexes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .report import Violation
+
+# --------------------------------------------------------------------------
+# The canonical collective table.  Dash spelling is the HLO-dialect one;
+# StableHLO spells the same ops with underscores — COLLECTIVE_RE accepts
+# both, and every other matcher in the repo is built from this pattern.
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+_KIND_PAT = "|".join(k.replace("-", "[-_]") for k in COLLECTIVE_KINDS)
+COLLECTIVE_RE = re.compile(rf"\b({_KIND_PAT})(?:-(start|done))?\b")
+
+# Dialect-anchored matchers (both derive from _KIND_PAT so a new kind is
+# added in exactly one place).
+_SHLO_COLL_RE = re.compile(rf"(?:stablehlo|mhlo)\.({_KIND_PAT})\b")
+_HLO_COLL_RE = re.compile(
+    rf"%(?P<name>[\w.\-]+)\s*=\s*"
+    rf"(?:\((?P<tuple>[^)]*)\)|(?P<shape>\w+\[[\d,]*\]\S*))\s*"
+    rf"(?P<kind>{_KIND_PAT})(?:-(?P<phase>start|done))?\(")
+
+_DTYPE_BITS = {
+    # HLO dialect names (pred occupies one byte on the wire)
+    "pred": 8, "s8": 8, "u8": 8, "s16": 16, "u16": 16, "bf16": 16,
+    "f16": 16, "s32": 32, "u32": 32, "f32": 32, "s64": 64, "u64": 64,
+    "f64": 64, "c64": 64, "c128": 128,
+    # StableHLO / MLIR element types
+    "i1": 8, "i8": 8, "i16": 16, "i32": 32, "i64": 64,
+    "ui8": 8, "ui16": 16, "ui32": 32, "ui64": 64,
+}
+
+_STR_RE = re.compile(r'"(?:[^"\\]|\\.)*"')
+_FUNC_RE = re.compile(r"func\.func\s+(?:\w+\s+)?@([\w.$\-]+)")
+_CALL_RE = re.compile(r"\bcall\s+@([\w.$\-]+)")
+_WHILE_SHLO_RE = re.compile(r"\b(?:stablehlo|mhlo)\.while\b")
+_TENSOR_RE = re.compile(r"tensor<([^>]*)>")
+_HLO_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->")
+_HLO_WHILE_RE = re.compile(r"\bwhile\(")
+_HLO_REF_RE = re.compile(r"(?:to_apply|calls|condition|body)=%?([\w.\-]+)")
+_HLO_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_HLO_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _strip_strings(line: str) -> str:
+    return _STR_RE.sub('""', line)
+
+
+def _dtype_bits(dtype: str) -> int:
+    try:
+        return _DTYPE_BITS[dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown element type {dtype!r} in lowered program; add it to "
+            "repro.analysis.hlo_check._DTYPE_BITS") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorType:
+    """One tensor crossing (or produced by) a collective."""
+
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def bits(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n * _dtype_bits(self.dtype)
+
+    @property
+    def bytes(self) -> int:
+        return self.bits // 8
+
+    def __str__(self) -> str:
+        return f"{self.dtype}[{','.join(str(d) for d in self.dims)}]"
+
+
+def _mlir_tensor(inner: str) -> TensorType:
+    toks = [t for t in inner.strip().split("x") if t]
+    if not toks:
+        raise ValueError(f"empty tensor type <{inner}>")
+    dtype = toks[-1]
+    dims = []
+    for t in toks[:-1]:
+        if not t.isdigit():
+            raise ValueError(f"unsupported tensor dim {t!r} in <{inner}>")
+        dims.append(int(t))
+    _dtype_bits(dtype)  # validate eagerly
+    return TensorType(dtype, tuple(dims))
+
+
+def _hlo_tensor(dtype: str, dims: str) -> TensorType:
+    _dtype_bits(dtype)
+    return TensorType(dtype,
+                      tuple(int(d) for d in dims.split(",") if d))
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One collective in the parsed program (an async -start/-done pair
+    counts as ONE op, payload taken from the -done result)."""
+
+    kind: str                     # canonical dash spelling
+    func: str                     # containing function / computation
+    line: int                     # 1-based line of the op (start, if async)
+    in_loop: bool                 # lexically or transitively in a while body
+    operands: List[TensorType]
+    results: List[TensorType]
+    async_pair: bool = False
+
+    @property
+    def payload_bits(self) -> int:
+        return sum(t.bits for t in self.results)
+
+    def describe(self) -> str:
+        res = ", ".join(str(t) for t in self.results)
+        return f"{self.kind}({res}) in {self.func}"
+
+
+@dataclasses.dataclass
+class ProgramModel:
+    """Structured view of one lowered/compiled program."""
+
+    dialect: str                  # "stablehlo" | "hlo"
+    collectives: List[CollectiveOp]
+    n_while: int
+
+    @property
+    def payload_bits(self) -> int:
+        return sum(c.payload_bits for c in self.collectives)
+
+
+def _canon(kind: str) -> str:
+    return kind.replace("_", "-")
+
+
+# --------------------------------------------------------------------------
+# StableHLO (MLIR) dialect
+
+
+def _stablehlo_signature(raw_lines: List[str], i: int, col: int
+                         ) -> Tuple[List[TensorType], List[TensorType]]:
+    """Find the statement's ``: (operands) -> results`` type signature.
+
+    Scans forward from just after the op name, tracking ``(){}`` depth
+    (string literals skipped, so attribute payloads like
+    ``mhlo.sharding = "{devices=[8,1]<=[8]}"`` cannot unbalance the
+    scan); the signature is the first ``:`` found at depth 0 — colons
+    inside attribute dictionaries or regions sit at depth >= 1.
+    """
+    depth = 0
+    j, pos, sig = i, col, None
+    for _ in range(400):
+        if j >= len(raw_lines):
+            break
+        line = raw_lines[j]
+        in_str = False
+        while pos < len(line):
+            ch = line[pos]
+            if in_str:
+                if ch == "\\":
+                    pos += 2
+                    continue
+                if ch == '"':
+                    in_str = False
+            elif ch == '"':
+                in_str = True
+            elif ch in "({":
+                depth += 1
+            elif ch in ")}":
+                depth -= 1
+                if depth < 0:       # statement ended without a signature
+                    return [], []
+            elif ch == ":" and depth == 0:
+                sig = line[pos + 1:]
+                break
+            pos += 1
+        if sig is not None:
+            break
+        j, pos = j + 1, 0
+    if sig is None:
+        return [], []
+    head, _, tail = sig.partition("->")
+    operands = [_mlir_tensor(t) for t in _TENSOR_RE.findall(head)]
+    results = ([_mlir_tensor(t) for t in _TENSOR_RE.findall(tail)]
+               if tail else [])
+    if not results:                 # `: tensor<...>` single-type form
+        results = operands
+    return operands, results
+
+
+def _parse_stablehlo(text: str) -> ProgramModel:
+    raw_lines = text.splitlines()
+    brace: List[bool] = []        # True == this open brace is a loop region
+    whiles: List[List[int]] = []  # pending [open-depth, regions-remaining]
+    func = "<module>"
+    n_while = 0
+    collectives: List[CollectiveOp] = []
+    call_edges: List[Tuple[str, str, bool]] = []
+    for i, raw in enumerate(raw_lines):
+        stripped = _strip_strings(raw)
+        fm = _FUNC_RE.search(stripped)
+        if fm:
+            func = fm.group(1)
+        in_loop_here = any(brace)
+        if _WHILE_SHLO_RE.search(raw):
+            n_while += 1
+            whiles.append([len(brace), 2])
+        for cm in _CALL_RE.finditer(stripped):
+            call_edges.append((func, cm.group(1), in_loop_here))
+        for cm in _SHLO_COLL_RE.finditer(raw):
+            start = cm.end()
+            if start < len(raw) and raw[start] == '"':
+                start += 1          # generic form: op name is quoted
+            operands, results = _stablehlo_signature(raw_lines, i, start)
+            collectives.append(CollectiveOp(
+                kind=_canon(cm.group(1)), func=func, line=i + 1,
+                in_loop=in_loop_here, operands=operands, results=results))
+        for ch in stripped:
+            if ch == "{":
+                tag = False
+                if whiles and whiles[-1][0] == len(brace):
+                    tag = True
+                    whiles[-1][1] -= 1
+                    if whiles[-1][1] == 0:
+                        whiles.pop()
+                brace.append(tag)
+            elif ch == "}":
+                if brace:
+                    brace.pop()
+    # taint functions reachable from any loop-context call site
+    tainted: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for caller, callee, at_loop in call_edges:
+            if (at_loop or caller in tainted) and callee not in tainted:
+                tainted.add(callee)
+                changed = True
+    for op in collectives:
+        if op.func in tainted:
+            op.in_loop = True
+    return ProgramModel("stablehlo", collectives, n_while)
+
+
+# --------------------------------------------------------------------------
+# HLO dialect (compiled `.as_text()` / golden snippets)
+
+
+def _parse_hlo(text: str) -> ProgramModel:
+    comp = ""
+    refs: Dict[str, Set[str]] = {}
+    loop_roots: Set[str] = set()
+    n_while = 0
+    raw_ops: List[dict] = []
+    for i, raw in enumerate(text.splitlines()):
+        line = _strip_strings(raw)
+        cm = _HLO_COMP_RE.match(line)
+        if cm and line.rstrip().endswith("{"):
+            comp = cm.group(1)
+            continue
+        if _HLO_WHILE_RE.search(line):
+            n_while += 1
+            for r in re.finditer(r"(?:condition|body)=%?([\w.\-]+)", line):
+                loop_roots.add(r.group(1))
+        for r in _HLO_REF_RE.finditer(line):
+            refs.setdefault(comp, set()).add(r.group(1))
+        for r in _HLO_BRANCH_RE.finditer(line):
+            for name in re.findall(r"%?([\w.\-]+)", r.group(1)):
+                refs.setdefault(comp, set()).add(name)
+        m = _HLO_COLL_RE.search(line)
+        if m:
+            if m.group("tuple") is not None:
+                results = [_hlo_tensor(d, s) for d, s in
+                           _HLO_SHAPE_RE.findall(m.group("tuple"))]
+            else:
+                sm = _HLO_SHAPE_RE.match(m.group("shape"))
+                results = [_hlo_tensor(sm.group(1), sm.group(2))]
+            rest = line[m.end():]
+            operands = [_hlo_tensor(d, s) for d, s in
+                        _HLO_SHAPE_RE.findall(rest.split("),")[0])]
+            first_arg = re.search(r"%([\w.\-]+)", rest)
+            raw_ops.append({
+                "name": m.group("name"), "kind": _canon(m.group("kind")),
+                "phase": m.group("phase"), "results": results,
+                "operands": operands, "comp": comp, "line": i + 1,
+                "arg": first_arg.group(1) if first_arg else None,
+            })
+    # taint closure: computations reachable from any while condition/body
+    tainted = set(loop_roots)
+    changed = True
+    while changed:
+        changed = False
+        for t in list(tainted):
+            for callee in refs.get(t, ()):
+                if callee not in tainted:
+                    tainted.add(callee)
+                    changed = True
+    # pair async -start/-done: one CollectiveOp per pair, payload from done
+    starts = {op["name"]: op for op in raw_ops if op["phase"] == "start"}
+    consumed: Set[str] = set()
+    collectives: List[CollectiveOp] = []
+    for op in raw_ops:
+        if op["phase"] == "start":
+            continue
+        if op["phase"] == "done":
+            start = starts.get(op["arg"])
+            if start is not None:
+                consumed.add(start["name"])
+            in_loop = (op["comp"] in tainted or
+                       (start is not None and start["comp"] in tainted))
+            collectives.append(CollectiveOp(
+                kind=op["kind"],
+                func=(start or op)["comp"],
+                line=(start or op)["line"], in_loop=in_loop,
+                operands=(start or op)["operands"],
+                results=op["results"], async_pair=True))
+            continue
+        collectives.append(CollectiveOp(
+            kind=op["kind"], func=op["comp"], line=op["line"],
+            in_loop=op["comp"] in tainted,
+            operands=op["operands"], results=op["results"]))
+    for name, start in starts.items():
+        if name not in consumed:    # dangling start still counts once
+            collectives.append(CollectiveOp(
+                kind=start["kind"], func=start["comp"], line=start["line"],
+                in_loop=start["comp"] in tainted,
+                operands=start["operands"], results=start["results"],
+                async_pair=True))
+    collectives.sort(key=lambda c: c.line)
+    return ProgramModel("hlo", collectives, n_while)
+
+
+def parse_program(text: str) -> ProgramModel:
+    """Parse lowered StableHLO MLIR or compiled HLO text (auto-detected)."""
+    if re.search(r"\bfunc\.func\b|\bstablehlo\.", text):
+        return _parse_stablehlo(text)
+    return _parse_hlo(text)
+
+
+# --------------------------------------------------------------------------
+# Invariant checks
+
+
+def check_program(model: ProgramModel, *, program: str = "<program>",
+                  expect_count: Optional[int] = 1,
+                  expected_bits: Optional[int] = None,
+                  forbidden_dims: Sequence[int] = (),
+                  allowed_dims: Sequence[int] = ()) -> List[Violation]:
+    """Run HLO001-HLO004 against one parsed program."""
+    vs: List[Violation] = []
+    if expect_count is not None and len(model.collectives) != expect_count:
+        vs.append(Violation(
+            "HLO001",
+            f"expected exactly {expect_count} collective(s), found "
+            f"{len(model.collectives)}",
+            where=program,
+            context=", ".join(c.describe() for c in model.collectives)))
+    for c in model.collectives:
+        if c.in_loop:
+            vs.append(Violation(
+                "HLO002",
+                f"{c.kind} reachable from a while-loop body — breaks the "
+                "one-visit-per-site bound",
+                where=f"{program}:{c.func}", context=c.describe()))
+    if expected_bits is not None:
+        got = model.payload_bits
+        if got != expected_bits:
+            vs.append(Violation(
+                "HLO003",
+                f"collective payload {got} bits != traffic_bits model "
+                f"{expected_bits} bits",
+                where=program,
+                context=", ".join(c.describe() for c in model.collectives)))
+    if forbidden_dims:
+        allowed = set(allowed_dims)
+        forbidden = set(forbidden_dims) - allowed
+        for c in model.collectives:
+            seen = set()
+            for t in list(c.operands) + list(c.results):
+                for d in t.dims:
+                    if d in forbidden and d not in seen:
+                        seen.add(d)
+                        vs.append(Violation(
+                            "HLO004",
+                            f"wire tensor {t} carries graph-sized dim {d} — "
+                            "traffic must not scale with |G|",
+                            where=f"{program}:{c.func}"))
+    return vs
+
+
+def _wire_model(fr, kind: str, batch: int, states: int
+                ) -> Tuple[int, Tuple[int, int]]:
+    """Expected (bits, (rows, cols)) of the one fused-batch collective."""
+    side = fr.n_boundary * states
+    rows, cols = side + 2 * batch, side + 1
+    if kind in ("reach", "rpq"):
+        cols = (cols + 31) // 32
+    return fr.traffic_bits(kind, states=states, batch=batch), (rows, cols)
+
+
+def verify_fragmentation(fr, *, batch: int = 2, qa=None, placement=None,
+                         mesh=None, kinds: Sequence[str] = ("reach", "dist",
+                                                            "rpq"),
+                         tag: str = "") -> List[Violation]:
+    """Lower the fused-batch program for every query kind on ``fr`` and
+    check HLO001-HLO004 against the ``traffic_bits`` wire model.
+
+    Requires >= 2 visible devices (the sharded lowering path); callers on
+    a single-device host should run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in a fresh
+    process (as ``python -m repro.analysis`` does).
+    """
+    from ..core import build_query_automaton
+    from ..core.distributed import lower_batch_hlo
+
+    if qa is None:
+        qa = build_query_automaton("(0|1)*", lambda x: int(x))
+    n = fr.g.n
+    pairs = [(i % n, (i + 1) % n) for i in range(batch)]
+    forbidden = {int(fr.g.n), int(fr.g.src.size)}
+    vs: List[Violation] = []
+    for kind in kinds:
+        states = qa.n_states if kind == "rpq" else 1
+        hlo = lower_batch_hlo(fr, pairs, kind,
+                              qa=qa if kind == "rpq" else None,
+                              mesh=mesh, placement=placement)
+        model = parse_program(hlo)
+        bits, (rows, cols) = _wire_model(fr, kind, batch, states)
+        name = f"{tag}{kind}[batch={batch}]"
+        vs.extend(check_program(
+            model, program=name, expect_count=1, expected_bits=bits,
+            forbidden_dims=forbidden, allowed_dims=(rows, cols)))
+    return vs
+
+
+def verify_session(session, *, batch: int = 2, qa=None,
+                   kinds: Sequence[str] = ("reach", "dist", "rpq")
+                   ) -> List[Violation]:
+    """Public entry point: statically verify the paper's guarantees on a
+    user's :class:`~repro.core.session.QuerySession` mesh/placement.
+
+    Returns the (empty-on-success) violation list; raise-on-failure is one
+    ``assert not verify_session(s)`` away.
+    """
+    return verify_fragmentation(
+        session.fr, batch=batch, qa=qa, placement=session.placement,
+        mesh=session._mesh, kinds=kinds)
+
+
+def verify_store(store, *, batch: int = 2, qa=None,
+                 kinds: Sequence[str] = ("reach", "dist", "rpq")
+                 ) -> List[Violation]:
+    """Verify every live MVCC version of a
+    :class:`~repro.core.versions.VersionedCacheStore` (the PR-9 guarantee:
+    one collective on every snapshot a reader can still pin)."""
+    session = store.session
+    vs: List[Violation] = []
+    for ver in store.live():
+        vs.extend(verify_fragmentation(
+            ver.fr, batch=batch, qa=qa, placement=session.placement,
+            mesh=session._mesh, kinds=kinds, tag=f"v{ver.vid}:"))
+    return vs

@@ -1,0 +1,54 @@
+"""Shared violation/report model for the analysis passes (DESIGN.md Sec. 10).
+
+Every pass — the HLO invariant checker, the repo lint, and the lock-order
+checker — reports findings as :class:`Violation` records so the CLI can
+fold them into one JSON report and CI can fail on any non-empty list.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class Violation:
+    """One finding from one pass.
+
+    ``rule`` is the stable identifier (``HLO00x`` for program invariants,
+    ``RPR00x`` for the repo lint, ``LCK00x`` for lock order); ``where``
+    names the program / file:line / lock edge the finding is anchored to.
+    """
+
+    rule: str
+    message: str
+    where: str = ""
+    context: str = ""
+
+    def to_dict(self) -> Dict:
+        return {k: v for k, v in dataclasses.asdict(self).items() if v}
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        loc = f" [{self.where}]" if self.where else ""
+        return f"{self.rule}{loc}: {self.message}"
+
+
+def make_report(sections: Dict[str, List[Violation]],
+                extra: Dict = None) -> Dict:
+    """Fold per-pass violation lists into the CLI's JSON report shape."""
+    out = {
+        "ok": all(not v for v in sections.values()),
+        "violations": {
+            name: [v.to_dict() for v in vs] for name, vs in sections.items()
+        },
+        "counts": {name: len(vs) for name, vs in sections.items()},
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+def dump_report(report: Dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")

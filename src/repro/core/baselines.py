@@ -60,7 +60,7 @@ def dis_reach_m(fr: Fragmentation, s: int, t: int,
                 max_rounds: Optional[int] = None) -> BaselineResult:
     if s == t:
         return BaselineResult(True, 0, 0, 0)
-    arrs = {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+    arrs = {k: jnp.array(v) for k, v in fr.arrays.items()}
     k, n_max, B = fr.k, fr.n_max, fr.B
     max_rounds = max_rounds or (fr.B + 2)
 

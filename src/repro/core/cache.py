@@ -127,7 +127,7 @@ def _boundary_rows(fr: Fragmentation, frontiers, fill, combine):
     exactly one fragment, so rows never collide)."""
     B = fr.B
     src_row = fr.arrays["src_row"]                  # [k, S]; pad rows == B
-    flat_rows = jnp.asarray(src_row.reshape(-1))
+    flat_rows = jnp.array(src_row.reshape(-1))
     flat = frontiers.reshape(-1, frontiers.shape[-1])
     out = jnp.full((B + 1, frontiers.shape[-1]), fill, frontiers.dtype)
     out = combine(out.at[flat_rows], flat)

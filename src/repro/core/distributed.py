@@ -66,7 +66,7 @@ def fragment_mesh(k: Optional[int] = None, devices=None) -> Mesh:
 
 def _shard_args(fr: Fragmentation, s: int, t: int):
     qs = query_slots(fr, s, t)
-    args = {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+    args = {k: jnp.array(v) for k, v in fr.arrays.items()}
     args["s_local"] = jnp.asarray(qs["s_local"])
     args["t_local"] = jnp.asarray(qs["t_local"])
     return args

@@ -191,8 +191,8 @@ def _update_frontiers(cache, dirty: np.ndarray, warm: bool):
     bl_host = np.asarray(bl)
     bl_d_host = np.asarray(bl_d) if bl_d is not None else None
     for f in np.nonzero(dirty)[0]:
-        esrc = jnp.asarray(fr.arrays["esrc"][f])
-        edst = jnp.asarray(fr.arrays["edst"][f])
+        esrc = jnp.array(fr.arrays["esrc"][f])
+        edst = jnp.array(fr.arrays["edst"][f])
         init, rows, bpos = _frontier_init(
             fr, f, bl_host if warm else None, dist=False)
         front = engine.resume_frontier_reach(esrc, edst, init,

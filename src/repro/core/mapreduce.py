@@ -35,7 +35,7 @@ def mr_drpq(fr: Fragmentation, s: int, t: int, qa: QueryAutomaton) -> MRResult:
     if s == t:
         return MRResult(bool(qa.nullable), 0, 0, 0)
     Q = qa.n_states
-    arrs = {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+    arrs = {k: jnp.array(v) for k, v in fr.arrays.items()}
     qs = query_slots(fr, s, t)
     q_labels, q_trans = jnp.asarray(qa.state_labels), jnp.asarray(qa.trans)
 

@@ -448,7 +448,9 @@ def default_session(fr: Fragmentation,
 #     (arrivals via a cross edge landing exactly on t).
 
 def _as_jnp(fr: Fragmentation):
-    return {k: jnp.asarray(v) for k, v in fr.arrays.items()}
+    # jnp.array (copy=True), not asarray: the host buffers are mutated in
+    # place by apply_delta, and on CPU asarray may alias them (PR 7).
+    return {k: jnp.array(v) for k, v in fr.arrays.items()}
 
 
 def _tgt_cols(fr: Fragmentation, t: int) -> jnp.ndarray:

@@ -1,62 +1,41 @@
 """Parse collective traffic out of lowered/compiled HLO text.
 
 cost_analysis() has no collective-bytes entry, so the roofline's third term
-is summed from the operand sizes of every collective op in the module
-(assignment: §ROOFLINE ANALYSIS)."""
+is summed from the result sizes of every collective op in the module
+(assignment: §ROOFLINE ANALYSIS).
+
+The actual parsing lives in :mod:`repro.analysis.hlo_check` — the single
+structured HLO/StableHLO parser in the repo (DESIGN.md Sec. 10.1).  This
+module keeps the launch layer's aggregate view on top of it.  Unlike the
+old regex scan, the structured parser counts an async ``-start``/``-done``
+pair as ONE collective and raises on element types it does not know
+instead of silently guessing 4 bytes.
+"""
 from __future__ import annotations
 
-import re
-from typing import Dict
+from typing import Dict, List
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
-}
-
-# matches e.g.  %all-reduce.5 = f32[128,1024]{1,0} all-reduce(...)
-_HLO_RE = re.compile(
-    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
-    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
-_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _elem_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+from ..analysis.hlo_check import parse_program
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum output sizes of every collective in an *optimized HLO* module.
+    """Sum result sizes of every collective in a lowered/compiled module.
     Returns {op_kind: bytes, ..., 'total': bytes, 'count': n}."""
+    model = parse_program(hlo_text)
     out: Dict[str, int] = {}
-    count = 0
-    for m in _HLO_RE.finditer(hlo_text):
-        tuple_body, dtype, dims, kind = m.groups()
-        if tuple_body is not None:
-            size = sum(_elem_bytes(d, s)
-                       for d, s in _TUPLE_ELEM_RE.findall(tuple_body))
-        else:
-            size = _elem_bytes(dtype, dims)
-        out[kind] = out.get(kind, 0) + size
-        count += 1
-    out["total"] = sum(v for k, v in out.items() if k != "total")
-    out["count"] = count
+    for op in model.collectives:
+        out[op.kind] = out.get(op.kind, 0) + op.payload_bits // 8
+    out["total"] = sum(out.values())
+    out["count"] = len(model.collectives)
     return out
 
 
-def collective_schedule(hlo_text: str, limit: int = 12):
+def collective_schedule(hlo_text: str, limit: int = 12) -> List[str]:
     """First few collectives with shapes — the 'collective schedule' the
     dry-run records in EXPERIMENTS.md."""
     items = []
-    for m in _HLO_RE.finditer(hlo_text):
-        tuple_body, dtype, dims, kind = m.groups()
-        shape = tuple_body if tuple_body is not None else f"{dtype}[{dims}]"
-        items.append(f"{kind}({shape})")
-        if len(items) >= limit:
-            break
+    for op in parse_program(hlo_text).collectives[:limit]:
+        shapes = ", ".join(str(t) for t in op.results)
+        shape = shapes if len(op.results) == 1 else f"({shapes})"
+        items.append(f"{op.kind}({shape})")
     return items

@@ -29,3 +29,18 @@ def _clear_jax_caches_between_modules():
     yield
     import jax
     jax.clear_caches()
+
+
+@pytest.fixture(autouse=True)
+def _runtime_lock_order(request):
+    """Under the chaos/mvcc suites, run every session/store/engine built
+    by the test on instrumented locks and fail on any acquisition-order
+    inversion (DESIGN.md Sec. 10.3, rules LCK001-003)."""
+    marks = {m.name for m in request.node.iter_markers()}
+    if not marks & {"chaos", "mvcc"}:
+        yield
+        return
+    from repro.analysis.locks import monitored
+    with monitored() as mon:
+        yield
+    assert not mon.violations, [str(v) for v in mon.violations]

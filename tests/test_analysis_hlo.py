@@ -1,0 +1,241 @@
+"""repro.analysis.hlo_check: the structured HLO/StableHLO parser and the
+HLO001-HLO004 invariant checks (DESIGN.md Sec. 10.1).
+
+Golden snippets mirror real jax 0.4.x output: the quoted generic form for
+region-carrying StableHLO ops, the pretty ``stablehlo.while`` spelling,
+and the compiled HLO dialect with ``-start``/``-done`` async pairs.  The
+negative tests inject exactly the failures the pass exists to catch — a
+second collective, a looped collective, a wrong payload, and a
+|V|-scaling operand on the wire — and assert each is reported.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import check_program, parse_program
+
+# --- golden StableHLO (lowered, unoptimized) -------------------------------
+
+SHLO_ONE_COLLECTIVE = """
+module @jit_batch attributes {mhlo.num_partitions = 8 : i32} {
+  func.func public @main(%arg0: tensor<48x2xui32>) -> tensor<48x2xui32> {
+    %0 = "stablehlo.all_reduce"(%arg0) <{channel_handle =
+        #stablehlo.channel_handle<handle = 1, type = 1>, replica_groups =
+        dense<[[0, 1, 2, 3, 4, 5, 6, 7]]> : tensor<1x8xi64>,
+        use_global_device_ids}> ({
+    ^bb0(%a: tensor<ui32>, %b: tensor<ui32>):
+      %9 = stablehlo.or %a, %b : tensor<ui32>
+      stablehlo.return %9 : tensor<ui32>
+    }) : (tensor<48x2xui32>) -> tensor<48x2xui32>
+    return %0 : tensor<48x2xui32>
+  }
+}
+"""
+
+SHLO_LOOPED = """
+module @jit_loop {
+  func.func public @main(%arg0: tensor<8x4xi32>) -> tensor<8x4xi32> {
+    %c = stablehlo.constant dense<0> : tensor<i32>
+    %1:2 = stablehlo.while(%iterArg = %arg0, %i = %c)
+        : tensor<8x4xi32>, tensor<i32>
+     cond {
+      %2 = stablehlo.compare LT, %i, %i : (tensor<i32>, tensor<i32>)
+          -> tensor<i1>
+      stablehlo.return %2 : tensor<i1>
+    } do {
+      %3 = "stablehlo.all_gather"(%iterArg) <{all_gather_dim = 0 : i64,
+          replica_groups = dense<[[0, 1]]> : tensor<1x2xi64>}> :
+          (tensor<8x4xi32>) -> tensor<8x4xi32>
+      stablehlo.return %3, %i : tensor<8x4xi32>, tensor<i32>
+    }
+    return %1#0 : tensor<8x4xi32>
+  }
+}
+"""
+
+SHLO_CALLED_IN_LOOP = """
+module @jit_call {
+  func.func private @shout(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = "stablehlo.all_reduce"(%arg0) <{replica_groups =
+        dense<[[0, 1]]> : tensor<1x2xi64>}> ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %9 = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %9 : tensor<f32>
+    }) : (tensor<4xf32>) -> tensor<4xf32>
+    return %0 : tensor<4xf32>
+  }
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %c = stablehlo.constant dense<0> : tensor<i32>
+    %1:2 = stablehlo.while(%iterArg = %arg0, %i = %c)
+        : tensor<4xf32>, tensor<i32>
+     cond {
+      %2 = stablehlo.compare LT, %i, %i : (tensor<i32>, tensor<i32>)
+          -> tensor<i1>
+      stablehlo.return %2 : tensor<i1>
+    } do {
+      %3 = func.call @shout(%iterArg) : (tensor<4xf32>) -> tensor<4xf32>
+      stablehlo.return %3, %i : tensor<4xf32>, tensor<i32>
+    }
+    return %1#0 : tensor<4xf32>
+  }
+}
+"""
+
+# --- golden compiled HLO (optimized, async pair + tuple + while) -----------
+
+HLO_ASYNC_AND_WHILE = """
+HloModule jit_batch, entry_computation_layout={()->u32[48,2]{1,0}}
+
+%or.clone (x: u32[], y: u32[]) -> u32[] {
+  %x = u32[] parameter(0)
+  %y = u32[] parameter(1)
+  ROOT %or = u32[] or(u32[] %x, u32[] %y)
+}
+
+%body (p: (s32[], u32[48,2])) -> (s32[], u32[48,2]) {
+  %p = (s32[], u32[48,2]{1,0}) parameter(0)
+  ROOT %tup = (s32[], u32[48,2]{1,0}) tuple()
+}
+
+%cond (p.1: (s32[], u32[48,2])) -> pred[] {
+  %p.1 = (s32[], u32[48,2]{1,0}) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main () -> u32[48,2] {
+  %z = u32[48,2]{1,0} iota(), iota_dimension=0
+  %ar-start = (u32[48,2]{1,0}, u32[48,2]{1,0}) all-reduce-start(u32[48,2]{1,0} %z), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%or.clone
+  %ar-done = u32[48,2]{1,0} all-reduce-done((u32[48,2]{1,0}, u32[48,2]{1,0}) %ar-start)
+  %w = (s32[], u32[48,2]{1,0}) while((s32[], u32[48,2]{1,0}) %init), condition=%cond, body=%body
+  ROOT %out = u32[48,2]{1,0} get-tuple-element((s32[], u32[48,2]{1,0}) %w), index=1
+}
+"""
+
+HLO_TUPLE_ALL_TO_ALL = """
+ENTRY %main {
+  %a2a = (s32[64]{0}, s32[64]{0}) all-to-all(s32[64]{0} %a, s32[64]{0} %b), dimensions={0}
+}
+"""
+
+
+def test_stablehlo_single_collective_payload():
+    m = parse_program(SHLO_ONE_COLLECTIVE)
+    assert m.dialect == "stablehlo"
+    assert [c.kind for c in m.collectives] == ["all-reduce"]
+    (c,) = m.collectives
+    assert not c.in_loop
+    assert [str(t) for t in c.results] == ["ui32[48,2]"]
+    assert c.payload_bits == 48 * 2 * 32
+    assert check_program(m, expect_count=1,
+                         expected_bits=48 * 2 * 32) == []
+
+
+def test_stablehlo_collective_inside_while_flagged():
+    m = parse_program(SHLO_LOOPED)
+    assert m.n_while == 1
+    (c,) = m.collectives
+    assert c.kind == "all-gather" and c.in_loop
+    vs = check_program(m, expect_count=1)
+    assert any(v.rule == "HLO002" for v in vs)
+
+
+def test_stablehlo_loop_taint_through_call():
+    """A collective in a helper func.call'ed from a while body is still a
+    looped collective — taint flows through the call graph."""
+    m = parse_program(SHLO_CALLED_IN_LOOP)
+    (c,) = m.collectives
+    assert c.in_loop
+    assert any(v.rule == "HLO002" for v in check_program(m))
+
+
+def test_hlo_async_pair_counts_once_and_while_tracked():
+    m = parse_program(HLO_ASYNC_AND_WHILE)
+    assert m.dialect == "hlo"
+    assert m.n_while == 1
+    assert [c.kind for c in m.collectives] == ["all-reduce"]
+    (c,) = m.collectives
+    assert c.async_pair and not c.in_loop
+    # payload from the -done result, not the (in, out) start tuple
+    assert c.payload_bits == 48 * 2 * 32
+    assert check_program(m, expect_count=1,
+                         expected_bits=48 * 2 * 32) == []
+
+
+def test_hlo_tuple_result_sums_elements():
+    m = parse_program(HLO_TUPLE_ALL_TO_ALL)
+    (c,) = m.collectives
+    assert c.kind == "all-to-all"
+    assert c.payload_bits == 2 * 64 * 32
+
+
+def test_unknown_dtype_raises():
+    bad = SHLO_ONE_COLLECTIVE.replace("ui32", "f99")
+    with pytest.raises(ValueError, match="unknown element type"):
+        parse_program(bad)
+
+
+# --- injected failures: each must be caught --------------------------------
+
+def test_injected_second_collective_caught():
+    doubled = SHLO_ONE_COLLECTIVE.replace(
+        "    return %0 : tensor<48x2xui32>",
+        """    %1 = "stablehlo.all_reduce"(%0) <{replica_groups =
+        dense<[[0, 1]]> : tensor<1x2xi64>}> ({
+    ^bb0(%a: tensor<ui32>, %b: tensor<ui32>):
+      %9 = stablehlo.or %a, %b : tensor<ui32>
+      stablehlo.return %9 : tensor<ui32>
+    }) : (tensor<48x2xui32>) -> tensor<48x2xui32>
+    return %1 : tensor<48x2xui32>""")
+    m = parse_program(doubled)
+    assert len(m.collectives) == 2
+    vs = check_program(m, expect_count=1)
+    assert [v.rule for v in vs] == ["HLO001"]
+
+
+def test_injected_payload_mismatch_caught():
+    m = parse_program(SHLO_ONE_COLLECTIVE)
+    vs = check_program(m, expect_count=1, expected_bits=48 * 2 * 32 + 32)
+    assert [v.rule for v in vs] == ["HLO003"]
+
+
+def test_injected_graph_sized_wire_operand_caught():
+    """A |V|-sized dimension on the wire breaks Theorem 5.5 (traffic must
+    scale with the fragmentation, not the graph)."""
+    m = parse_program(SHLO_ONE_COLLECTIVE)
+    vs = check_program(m, expect_count=1, forbidden_dims=(48,),
+                       allowed_dims=())
+    assert any(v.rule == "HLO004" for v in vs)
+    # the same dims pass when they belong to the declared wire model
+    assert check_program(m, expect_count=1, forbidden_dims=(48,),
+                         allowed_dims=(48, 2)) == []
+
+
+# --- the CLI: full acceptance run ------------------------------------------
+
+def test_cli_verifies_all_kinds_versions_and_topologies(tmp_path):
+    """``python -m repro.analysis --all`` must pass clean on this repo,
+    covering 3 kinds x {exact-fit k=8, packed k=32-on-8} x >= 2 live MVCC
+    versions, and produce the JSON report artifact."""
+    here = os.path.dirname(__file__)
+    src = os.path.abspath(os.path.join(here, "..", "src"))
+    root = os.path.abspath(os.path.join(here, ".."))
+    out_path = tmp_path / "report.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--all",
+         "--root", root, "--out", str(out_path)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=root)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    report = json.loads(out_path.read_text())
+    assert report["ok"] is True
+    assert report["counts"] == {"hlo": 0, "lint": 0, "locks": 0}
+    covered = report["hlo"]["covered"]
+    assert any(c.startswith("k8d8: 2 versions") and "fpd=1" in c
+               for c in covered), covered
+    assert any(c.startswith("k32d8: 2 versions") and "fpd=4" in c
+               for c in covered), covered
+    assert report["locks"]["order"][0] == "engine._serve_mutex"

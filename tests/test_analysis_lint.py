@@ -1,0 +1,204 @@
+"""repro.analysis.lint: the RPR rule catalog (DESIGN.md Sec. 10.2).
+
+Each rule gets a positive snippet (the exact bug class a previous PR hit)
+and a negative twin (the idiomatic fix), checked through ``lint_source``;
+the repo itself must lint clean — that IS the baseline the satellite task
+established (every RPR001 hit was fixed with an explicit copy, every
+justified wall-clock use carries a ``repr: ignore`` with a reason).
+"""
+import os
+
+
+from repro.analysis import lint_paths, lint_source
+
+
+def rules(vs):
+    return [v.rule for v in vs]
+
+
+# --- RPR001: jnp.asarray may alias a mutable host buffer (PR 7) ------------
+
+def test_rpr001_asarray_on_fragment_arrays_flagged():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def shard(fr):\n"
+        "    return {k: jnp.asarray(v) for k, v in fr.arrays.items()}\n"
+    )
+    assert rules(lint_source(src)) == ["RPR001"]
+
+
+def test_rpr001_taint_flows_through_views_not_copies():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def f(fr, row_ids, owner, nb):\n"
+        "    esrc = fr.arrays['esrc']\n"
+        "    view = esrc.reshape(-1)\n"          # view: still aliased
+        "    bad = jnp.asarray(view)\n"
+        "    cols = fr.arrays['tgt_local'][owner[row_ids]][:, :nb]\n"
+        "    ok = jnp.asarray(cols)\n"           # advanced indexing: a copy
+        "    safe = jnp.asarray(esrc.copy())\n"  # explicit copy
+        "    return bad, ok, safe\n"
+    )
+    vs = lint_source(src)
+    assert rules(vs) == ["RPR001"]
+    assert ":5" in vs[0].where
+
+
+def test_rpr001_jnp_array_is_the_fix():
+    src = (
+        "import jax.numpy as jnp\n"
+        "def shard(fr):\n"
+        "    return {k: jnp.array(v) for k, v in fr.arrays.items()}\n"
+    )
+    assert lint_source(src) == []
+
+
+# --- RPR002: device transfer while holding a lock --------------------------
+
+def test_rpr002_device_put_under_lock_flagged():
+    src = (
+        "import jax\n"
+        "class S:\n"
+        "    def go(self, x):\n"
+        "        with self._lock:\n"
+        "            y = jax.device_put(x)\n"
+        "        return y\n"
+    )
+    vs = lint_source(src)
+    assert rules(vs) == ["RPR002"]
+    assert "lock taken at line 4" in vs[0].context
+
+
+def test_rpr002_transfer_outside_lock_ok():
+    src = (
+        "import jax\n"
+        "class S:\n"
+        "    def go(self, x):\n"
+        "        with self._lock:\n"
+        "            n = len(x)\n"
+        "        return jax.device_put(x), n\n"
+    )
+    assert lint_source(src) == []
+
+
+# --- RPR003: unseeded randomness / wall-clock on serving paths -------------
+
+def test_rpr003_wall_clock_and_unseeded_rng_on_serve_path():
+    src = (
+        "import time\n"
+        "import numpy as np\n"
+        "import random\n"
+        "def schedule():\n"
+        "    t0 = time.monotonic()\n"
+        "    jitter = np.random.random()\n"
+        "    pick = random.choice([1, 2])\n"
+        "    return t0 + jitter + pick\n"
+    )
+    assert rules(lint_source(src, serve_path=True)) == ["RPR003"] * 3
+
+
+def test_rpr003_seeded_generator_ok_and_rule_is_serve_only():
+    src = (
+        "import numpy as np\n"
+        "def schedule():\n"
+        "    rng = np.random.default_rng(0)\n"
+        "    return rng.random()\n"
+    )
+    assert lint_source(src, serve_path=True) == []
+    clocky = "import time\ndef f():\n    return time.time()\n"
+    assert lint_source(clocky, serve_path=False) == []
+    assert rules(lint_source(clocky, serve_path=True)) == ["RPR003"]
+
+
+# --- RPR004: unbounded container growth on serving paths (PR 9) ------------
+
+def test_rpr004_append_only_list_flagged():
+    src = (
+        "class Q:\n"
+        "    def __init__(self):\n"
+        "        self.dead = []\n"
+        "    def push(self, x):\n"
+        "        self.dead.append(x)\n"
+    )
+    vs = lint_source(src, serve_path=True)
+    assert rules(vs) == ["RPR004"]
+    assert "dead" in vs[0].message
+
+
+def test_rpr004_drained_or_bounded_containers_ok():
+    src = (
+        "import collections\n"
+        "class Q:\n"
+        "    def __init__(self):\n"
+        "        self.window = collections.deque(maxlen=64)\n"
+        "        self.batch = []\n"
+        "    def push(self, x):\n"
+        "        self.window.append(x)\n"
+        "        self.batch.append(x)\n"
+        "    def flush(self):\n"
+        "        out, self.batch = self.batch, []\n"    # drained: ok
+        "        return out\n"
+    )
+    assert lint_source(src, serve_path=True) == []
+
+
+# --- RPR005: mutable state captured by cached closures ---------------------
+
+def test_rpr005_lru_cache_over_mutable_state_flagged():
+    src = (
+        "import functools\n"
+        "@functools.lru_cache(maxsize=8)\n"
+        "def plan(fr):\n"
+        "    return fr.arrays['esrc'].sum()\n"
+    )
+    assert rules(lint_source(src)) == ["RPR005"]
+
+
+def test_rpr005_cache_on_immutable_key_ok():
+    src = (
+        "import functools\n"
+        "@functools.lru_cache(maxsize=8)\n"
+        "def plan(n, kind):\n"
+        "    return n * 2 + len(kind)\n"
+    )
+    assert lint_source(src) == []
+
+
+# --- suppressions ----------------------------------------------------------
+
+def test_justified_ignore_suppresses_only_that_rule():
+    src = (
+        "import time\n"
+        "def f():\n"
+        "    # repr: ignore[RPR003] wall-clock batch pacing is by design\n"
+        "    return time.monotonic()\n"
+    )
+    assert lint_source(src, serve_path=True) == []
+
+
+def test_bare_ignore_is_itself_a_violation():
+    src = (
+        "import time\n"
+        "def f():\n"
+        "    return time.monotonic()  # repr: ignore[RPR003]\n"
+    )
+    vs = lint_source(src, serve_path=True)
+    assert rules(vs) == ["RPR000"]      # zero silent suppressions
+
+
+def test_ignore_for_wrong_rule_does_not_suppress():
+    src = (
+        "import time\n"
+        "def f():\n"
+        "    # repr: ignore[RPR001] totally unrelated justification\n"
+        "    return time.monotonic()\n"
+    )
+    assert rules(lint_source(src, serve_path=True)) == ["RPR003"]
+
+
+# --- the repo itself is the clean baseline ---------------------------------
+
+def test_repo_lints_clean():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src", "repro"))
+    assert [str(v) for v in lint_paths([src])] == []

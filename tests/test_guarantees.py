@@ -22,7 +22,7 @@ from oracles import oracle_reach
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, re, sys
+import json, sys
 sys.path.insert(0, "__SRC__")
 sys.path.insert(0, "__TESTS__")
 import numpy as np
@@ -98,42 +98,50 @@ ok_batch &= all(bool(a) == nx.has_path(G1, s, t) for (s, t), a in zip(p1, b1))
 qa = build_query_automaton("(0|1|2|3)*", lambda x: int(x))
 ans_rpq = dis_rpq_sharded(fr, 0, 17, qa)
 
-COLL_RE = (r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|"
-           r"all_to_all|collective_permute)[a-z_]*")
+# ONE collective-matching parser in the repo: the structured model from
+# repro.analysis (DESIGN.md Sec. 10.1), not a window-scanning regex.
+from repro.analysis import check_program, parse_program
 
-def scan(hlo):
-    matches = list(re.finditer(COLL_RE, hlo))
-    # the collective's operand/result types live within the op's text window
-    return ([m.group(0) for m in matches],
-            [hlo[m.start():m.start() + 800] for m in matches])
+def coll_report(hlo, rows, cols, dtype, expected_bits=None):
+    m = parse_program(hlo)
+    vs = check_program(m, expect_count=1, expected_bits=expected_bits)
+    return {
+        "collectives": [c.kind for c in m.collectives],
+        "payload_shape_ok": any(
+            c.results and c.results[0].dtype == dtype
+            and c.results[0].dims == (rows, cols) for c in m.collectives),
+        "violations": [str(v) for v in vs],
+    }
 
 hlo = lower_reach_hlo(fr, 0, 17)
-colls, spans = scan(hlo)
-packed = all("ui32" in s for s in spans)
+model1 = parse_program(hlo)
+colls = [c.kind for c in model1.collectives]
+packed = all(t.dtype == "ui32"
+             for c in model1.collectives for t in c.results)
 W = (fr.B + 31) // 32
-shape = f"{fr.B}x{W}xui32"
-payload_shape_ok = any(shape in s for s in spans)
+payload_shape_ok = any(c.results and c.results[0].dims == (fr.B, W)
+                       for c in model1.collectives)
 
 # batched HLO, all three kinds: one collective per fused group, payload
 # typed [side + 2N, side + 1] (bitpacked ui32 for reach/rpq, raw i32 for
-# the tropical wire)
+# the tropical wire); check_program also pins payload bits to the
+# fr.traffic_bits wire model (Theorem 5.5)
 N, nb = 8, fr.n_boundary
 side_q = nb * qa_b.n_states
 batch_hlo = {
     "reach": (lower_batch_hlo(fr, dpairs, "reach"),
-              f"{nb + 2 * N}x{(nb + 1 + 31) // 32}xui32"),
+              (nb + 2 * N, (nb + 1 + 31) // 32, "ui32"), 1),
     "dist": (lower_batch_hlo(fr, dpairs, "dist"),
-             f"{nb + 2 * N}x{nb + 1}xi32"),
+             (nb + 2 * N, nb + 1, "i32"), 1),
     "rpq": (lower_batch_hlo(fr, dpairs, "rpq", qa=qa_b),
-            f"{side_q + 2 * N}x{(side_q + 1 + 31) // 32}xui32"),
+            (side_q + 2 * N, (side_q + 1 + 31) // 32, "ui32"),
+            qa_b.n_states),
 }
 batch_report = {}
-for kind, (bh, want_shape) in batch_hlo.items():
-    bcolls, bspans = scan(bh)
-    batch_report[kind] = {
-        "collectives": bcolls,
-        "payload_shape_ok": any(want_shape in s for s in bspans),
-    }
+for kind, (bh, (rows, cols, dtype), states) in batch_hlo.items():
+    batch_report[kind] = coll_report(
+        bh, rows, cols, dtype,
+        expected_bits=fr.traffic_bits(kind, states=states, batch=N))
 
 # ---- scale-out (k >> d): 32 fragments packed onto the 8-device mesh ----
 # The one-collective-per-fused-group guarantee must hold verbatim when
@@ -167,19 +175,18 @@ nb2, N2 = fr32.n_boundary, len(p32)
 side2 = nb2 * qa_b.n_states
 pack_hlo = {
     "reach": (lower_batch_hlo(fr32, p32, "reach", placement=pl32),
-              f"{nb2 + 2 * N2}x{(nb2 + 1 + 31) // 32}xui32"),
+              (nb2 + 2 * N2, (nb2 + 1 + 31) // 32, "ui32"), 1),
     "dist": (lower_batch_hlo(fr32, p32, "dist", placement=pl32),
-             f"{nb2 + 2 * N2}x{nb2 + 1}xi32"),
+             (nb2 + 2 * N2, nb2 + 1, "i32"), 1),
     "rpq": (lower_batch_hlo(fr32, p32, "rpq", qa=qa_b, placement=pl32),
-            f"{side2 + 2 * N2}x{(side2 + 1 + 31) // 32}xui32"),
+            (side2 + 2 * N2, (side2 + 1 + 31) // 32, "ui32"),
+            qa_b.n_states),
 }
 pack_report = {}
-for kind, (bh, want_shape) in pack_hlo.items():
-    pcolls, pspans = scan(bh)
-    pack_report[kind] = {
-        "collectives": pcolls,
-        "payload_shape_ok": any(want_shape in s for s in pspans),
-    }
+for kind, (bh, (rows, cols, dtype), states) in pack_hlo.items():
+    pack_report[kind] = coll_report(
+        bh, rows, cols, dtype,
+        expected_bits=fr32.traffic_bits(kind, states=states, batch=N2))
 
 print(json.dumps({"ok": bool(ok), "ok_batch": bool(ok_batch),
                   "ok_dist": bool(ok_dist),
@@ -246,6 +253,7 @@ def test_one_collective_per_fused_batch_all_kinds(sharded_report, kind):
     rep = sharded_report["batch"][kind]
     assert len(rep["collectives"]) == 1, rep
     assert rep["payload_shape_ok"], rep
+    assert rep["violations"] == [], rep
 
 
 def test_packed_batches_correct_on_small_mesh(sharded_report):
@@ -265,6 +273,7 @@ def test_one_collective_per_fused_batch_packed_mesh(sharded_report, kind):
     rep = sharded_report["pack"][kind]
     assert len(rep["collectives"]) == 1, rep
     assert rep["payload_shape_ok"], rep
+    assert rep["violations"] == [], rep
 
 
 def test_traffic_independent_of_graph_size():

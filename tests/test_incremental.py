@@ -290,7 +290,7 @@ def test_server_failed_update_preserves_later_requests():
 _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, re, sys
+import json, sys
 sys.path.insert(0, "__SRC__")
 import numpy as np
 from repro.graph import erdos_renyi, random_partition
@@ -328,14 +328,15 @@ for step in range(3):
 row_ids = incremental.pad_row_ids(np.arange(3), pad=8, cap=fr.n_boundary)
 warm = np.zeros((fr.k, fr.s_max, fr.n_max + 1), dtype=bool)
 hlo = lower_update_hlo(fr, warm, row_ids, mesh=mesh)
-colls = re.findall(
-    r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|all_to_all|"
-    r"collective_permute)[a-z_]*", hlo)
+from repro.analysis import parse_program
+model = parse_program(hlo)
 words = (fr.n_boundary + 31) // 32
-shape = f"{len(row_ids)}x{words}xui32"
+shape_ok = any(c.results and c.results[0].dtype == "ui32"
+               and c.results[0].dims == (len(row_ids), words)
+               for c in model.collectives)
 print(json.dumps({"ok": bool(ok), "modes": modes,
-                  "n_collectives": len(colls),
-                  "payload_shape_ok": shape in hlo,
+                  "n_collectives": len(model.collectives),
+                  "payload_shape_ok": bool(shape_ok),
                   "rows": int(len(row_ids)), "nb": int(fr.n_boundary)}))
 """
 

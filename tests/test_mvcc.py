@@ -347,7 +347,7 @@ def test_telemetry_has_no_mvcc_block_outside_mvcc_mode():
 _MVCC_SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, re, sys
+import json, sys
 sys.path.insert(0, "__SRC__")
 sys.path.insert(0, "__TESTS__")
 import numpy as np
@@ -401,12 +401,11 @@ pinned_old_ok = (r_old.answer is False
 store.release(old)
 
 # one collective per fused group on EVERY live version's fragmentation
-COLL_RE = (r"stablehlo\.[a-z_]*(?:all_reduce|all_gather|reduce_scatter|"
-           r"all_to_all|collective_permute)[a-z_]*")
+from repro.analysis import parse_program
 colls_per_version = []
 for ver in store.live():
     hlo = lower_batch_hlo(ver.fr, pairs, "reach")
-    colls_per_version.append(len(re.findall(COLL_RE, hlo)))
+    colls_per_version.append(len(parse_program(hlo).collectives))
 gauges = srv.telemetry()["mvcc"]
 srv.close()
 
